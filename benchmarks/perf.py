@@ -1,0 +1,206 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb runner: lower a cell under a named variant, record the
+roofline deltas (hypothesis -> change -> before -> after).
+
+Variants are explicit, reviewable configurations; each run writes
+results/perf/<cell>__<variant>.json with the same record schema as the
+dry-run, so benchmarks.roofline can render them side by side.
+
+Experiments (see EXPERIMENTS.md §Perf for the full log):
+
+A. paper-representative (pragma engine, Polybench on 8 ranks):
+     master_worker (faithful) -> collective -> +shard_inputs
+B. worst roofline fraction (gemma3-1b train_4k):
+     dp_tp baseline -> dp_only (batch over all 256 chips, ZeRO params)
+C. most collective-bound (qwen1.5-110b train_4k):
+     microbatch=16 baseline -> 8 -> 4 (ZeRO re-gather amortisation)
+"""
+import argparse
+import dataclasses
+import json
+
+
+def run_lm_variant(arch: str, shape_name: str, variant: str,
+                   overrides: dict, out_dir: str = "results/perf",
+                   cfg_patch=None):
+    import jax
+
+    from repro.configs import (SHAPES, get_config,
+                               recommended_train_config)
+    from repro.launch import hlo_analysis as ha
+    from repro.launch.dryrun import _write
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell, make_cell
+
+    cid = f"{arch}__{shape_name}__{variant}"
+    path = os.path.join(out_dir, cid + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    if cfg_patch is not None:
+        cfg = cfg_patch(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    train_cfg = dataclasses.replace(recommended_train_config(cfg),
+                                    **overrides)
+    cell = make_cell(cfg, shape, mesh, train_cfg=train_cfg)
+    compiled = lower_cell(cell).compile()
+    ma = compiled.memory_analysis()
+    rep = ha.analyze_hlo(compiled.as_text(), num_devices=mesh.size,
+                         default_trip=cfg.n_layers)
+    record = {
+        "cell": cid, "arch": arch, "shape": shape_name,
+        "mesh": "pod16x16", "kind": shape.kind, "devices": mesh.size,
+        "variant": variant, "overrides": {k: str(v) for k, v
+                                          in overrides.items()},
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device_gb": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+                / 2**30, 3),
+            "peak_tpu_adjusted_gb": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+                 - rep.f32_param_convert_bytes) / 2**30, 3),
+        },
+        "hlo": {
+            "dot_flops": rep.dot_flops,
+            "dot_bytes": rep.dot_bytes,
+            "wire_bytes": rep.total_wire_bytes,
+            "collective_bytes_by_kind": rep.by_kind(),
+            "f32_param_convert_bytes": rep.f32_param_convert_bytes,
+        },
+        "status": "ok",
+    }
+    _write(path, record)
+    return record
+
+
+def run_polybench_lowering_compare(out_dir: str = "results/perf"):
+    """Experiment A: wire bytes of the pragma engine's lowerings on the
+    gemm and 2mm kernels over 8 ranks."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import AxisType
+
+    from benchmarks.polybench import make_2mm, make_gemm
+    from repro import omp
+    from repro.launch import hlo_analysis as ha
+
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    results = {}
+    for make in (make_gemm, make_2mm):
+        k = make()
+        env = k.env_fn(k.n)
+        for variant, kw in [
+            ("master_worker", dict(lowering="master_worker")),
+            ("collective", dict(lowering="collective")),
+            ("collective_shardin", dict(lowering="collective",
+                                        shard_inputs=True)),
+        ]:
+            def pipeline(env, kw=kw, k=k):
+                out = dict(env)
+                for prog in k.programs:
+                    out = omp.to_mpi(prog, mesh, **kw)(out)
+                return out
+
+            avals = {kk: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                     for kk, v in env.items()}
+            compiled = jax.jit(pipeline).lower(avals).compile()
+            rep = ha.analyze_hlo(compiled.as_text(), num_devices=8)
+            results[f"{k.name}__{variant}"] = {
+                "wire_bytes": rep.total_wire_bytes,
+                "by_kind": rep.by_kind(),
+                "dot_flops": rep.dot_flops,
+            }
+            print(f"{k.name:6s} {variant:20s} "
+                  f"wire={rep.total_wire_bytes/1e6:9.2f} MB "
+                  f"{rep.by_kind()}", flush=True)
+    path = os.path.join(out_dir, "polybench_lowerings.json")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, default=float)
+    return results
+
+
+EXPERIMENTS = {
+    # C: qwen110 ZeRO x microbatch traffic
+    "qwen110_micro8": ("qwen1.5-110b", "train_4k",
+                       {"microbatch": 8}),
+    "qwen110_micro4": ("qwen1.5-110b", "train_4k",
+                       {"microbatch": 4}),
+    "qwen110_micro2": ("qwen1.5-110b", "train_4k",
+                       {"microbatch": 2}),
+    # B: gemma3 strategy
+    "gemma3_dponly": ("gemma3-1b", "train_4k",
+                      {"strategy": "dp_only", "zero3": True,
+                       "optimizer": "adafactor"}),
+    "gemma3_dponly_micro1": ("gemma3-1b", "train_4k",
+                             {"strategy": "dp_only", "zero3": True,
+                              "optimizer": "adafactor",
+                              "microbatch": 1}),
+    # D: worst roofline fraction: mamba2 (attn-free, TP-hostile dims)
+    "mamba2_dponly": ("mamba2-130m", "train_4k",
+                      {"strategy": "dp_only", "zero3": True,
+                       "optimizer": "adafactor", "microbatch": 1}),
+    "mamba2_micro1": ("mamba2-130m", "train_4k", {"microbatch": 1}),
+    # E: most collective-bound: qwen2-moe (60 experts on a 16-way axis)
+    "qwen2moe_micro1": ("qwen2-moe-a2.7b", "train_4k", {"microbatch": 1}),
+    "qwen2moe_dponly": ("qwen2-moe-a2.7b", "train_4k",
+                        {"strategy": "dp_only", "zero3": True,
+                         "optimizer": "adafactor", "microbatch": 1}),
+    # E2: pad experts 60 -> 64 to unlock EP sharding (beyond-paper)
+    "qwen2moe_pad64": ("qwen2-moe-a2.7b", "train_4k", {},
+                       "pad_experts_64"),
+    "qwen2moe_pad64_micro1": ("qwen2-moe-a2.7b", "train_4k",
+                              {"microbatch": 1}, "pad_experts_64"),
+    "qwen2moe_pad64_micro8": ("qwen2-moe-a2.7b", "train_4k",
+                              {"microbatch": 8}, "pad_experts_64"),
+    # G: streamed adafactor update (optimizer f32 transient memory)
+    "arctic_stream": ("arctic-480b", "train_4k", {}),
+    # C2: sequence-parallel activations (Megatron-SP, beyond-paper)
+    "qwen110_micro8_sp": ("qwen1.5-110b", "train_4k",
+                          {"microbatch": 8, "seq_parallel": True}),
+    "qwen110_micro16_sp": ("qwen1.5-110b", "train_4k",
+                           {"seq_parallel": True}),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--experiment", action="append", default=None,
+                    help="named experiment (repeatable); default: all")
+    ap.add_argument("--polybench", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    if args.polybench:
+        run_polybench_lowering_compare(args.out)
+        return
+    patches = {
+        "pad_experts_64": lambda cfg: dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, n_padded=64)),
+    }
+    names = args.experiment or list(EXPERIMENTS)
+    for name in names:
+        spec = EXPERIMENTS[name]
+        arch, shape, overrides = spec[0], spec[1], spec[2]
+        patch = patches[spec[3]] if len(spec) > 3 else None
+        rec = run_lm_variant(arch, shape, name, overrides, args.out,
+                             cfg_patch=patch)
+        print(f"{rec['cell']}: mem={rec['memory']['peak_per_device_gb']}GB"
+              f" (adj {rec['memory']['peak_tpu_adjusted_gb']})"
+              f" wire={rec['hlo']['wire_bytes']/2**30:.1f}GB", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Roofline table builder: reads dry-run JSON cells, emits §Roofline rows.
+
+Terms (per device, TPU v5e constants from the brief):
+  compute    = dot_flops / 197e12      (scan-corrected HLO MXU flops)
+  memory     = hlo_bytes / 819e9       (scan-corrected dot bytes — weight
+                                        + activation streaming; a lower
+                                        bound on HBM traffic)
+  collective = wire_bytes / 50e9       (HLO collectives x trip counts)
+
+MODEL_FLOPS uses 6*N_active*tokens (train) / 2*N_active*tokens
+(prefill/decode); the ratio MODEL_FLOPS / HLO_FLOPs exposes remat and
+redundant-compute waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    roofline_terms,
+)
+
+
+def model_flops_per_device(rec: dict) -> float:
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_active = cfg.active_param_count()
+    dev = rec.get("devices", 256)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / dev
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / dev
+    tokens = shape.global_batch          # decode: one token per sequence
+    return 2.0 * n_active * tokens / dev
+
+
+def load_cells(out_dir: str) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def row_for(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec["hlo"]
+    terms = roofline_terms(
+        hlo_flops=hlo["dot_flops"],
+        hlo_bytes=hlo["dot_bytes"],
+        wire_bytes=hlo["wire_bytes"],
+    )
+    mf = model_flops_per_device(rec)
+    return {
+        "cell": rec["cell"],
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "dominant": terms.dominant,
+        "roofline_fraction": terms.roofline_fraction,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo["dot_flops"] if hlo["dot_flops"] else 0.0,
+        "hbm_gb": rec["memory"]["peak_per_device_gb"],
+        "hbm_adj_gb": rec["memory"].get("peak_tpu_adjusted_gb"),
+        "wire_gb": hlo["wire_bytes"] / 2**30,
+    }
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| cell | compute_s | memory_s | collective_s | dominant | "
+           "roofline_frac | useful_ratio | HBM(adj) GB |\n"
+           "|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['cell']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.3f} | {r['useful_ratio']:.2f} "
+            f"| {r['hbm_gb']:.1f} ({r['hbm_adj_gb']}) |")
+    return "\n".join(out)
+
+
+def main(out_dir: str = "results/dryrun") -> None:
+    rows = [r for r in (row_for(c) for c in load_cells(out_dir)) if r]
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    print(render_markdown(rows))
+    print()
+    print("# hardware: %.0f TFLOP/s bf16, %.0f GB/s HBM, %.0f GB/s link"
+          % (PEAK_FLOPS / 1e12, HBM_BW / 1e9, ICI_BW / 1e9))
+    # the three hillclimb candidates
+    if rows:
+        worst = rows[0]
+        coll = max(rows, key=lambda r: r["collective_s"]
+                   / max(r["compute_s"], 1e-12))
+        print(f"# worst roofline fraction : {worst['cell']}")
+        print(f"# most collective-bound   : {coll['cell']}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

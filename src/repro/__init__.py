@@ -1,0 +1,9 @@
+"""repro: OMP2MPI on TPU — pragma-driven SPMD distribution for JAX.
+
+See README.md / DESIGN.md.  Public surface:
+
+    from repro import omp          # the paper's compiler pipeline
+    from repro.configs import get_config, SHAPES
+    from repro.models import build_model
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Sharded checkpointing with async save and restart discovery."""
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

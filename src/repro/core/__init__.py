@@ -1,0 +1,13 @@
+"""OMP2MPI core: pragma IR, analyses, planning and codegen.
+
+The paper's compiler pipeline, stage by stage:
+
+* :mod:`repro.core.pragma`    — the OpenMP annotation surface,
+* :mod:`repro.core.context`   — Context Analysis (IN/OUT/INOUT, §3.1.1),
+* :mod:`repro.core.loop`      — Loop Analysis (§3.1.2),
+* :mod:`repro.core.schedule`  — chunking math (§3.1.3),
+* :mod:`repro.core.plan`      — Workload Distribution decisions (§3.1.3),
+* :mod:`repro.core.transform` — codegen to shard_map programs (§3.1.3–4),
+* :mod:`repro.core.reduction` — reduction clause lowering,
+* :mod:`repro.core.report`    — the "generated code" view (Tables 2/3).
+"""

@@ -1,0 +1,396 @@
+"""Context Analysis (paper §3.1.1).
+
+OMP2MPI walks the Mercurium AST to classify every shared variable used in
+an OpenMP block as IN (read, never written), OUT (written, consumed after
+the block) or INOUT (both), and works out *where* the parallel iterator
+appears in each array access (the "linear first-dimension" rule of
+§3.1.3).  The JAX analogue walks the **jaxpr** of the loop body:
+
+* reads are recovered from how each ``env`` buffer's invar is consumed —
+  an invar whose every use is a ``dynamic_slice`` whose leading start
+  index is an *affine* function of the iterator is a sliced read
+  (``x[a*i+b]``); any other use makes it a whole-array read;
+* writes are the declared :class:`~repro.core.pragma.At`/``Put``/``Red``
+  updates; ``At`` indices are checked for affinity by symbolic affine
+  propagation through the jaxpr (add/sub/mul/neg/convert chains seeded at
+  the iterator invar).
+
+The affine tracker also understands the negative-index wrap pattern jnp
+emits for ``x[i]`` (``select_n(i < 0, i, i + dim)``): assuming a
+non-negative iteration space it resolves to the raw affine index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.extend import core as jcore
+
+from repro.core import pragma
+from repro.core.loop import LoopInfo, LoopNotCanonical
+
+
+# ---------------------------------------------------------------------------
+# Affine expressions over the loop iterator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Affine:
+    """``a * i + b`` with static integer coefficients."""
+
+    a: int
+    b: int
+
+    def __add__(self, other: "Affine") -> "Affine":
+        return Affine(self.a + other.a, self.b + other.b)
+
+    def __sub__(self, other: "Affine") -> "Affine":
+        return Affine(self.a - other.a, self.b - other.b)
+
+    def scale(self, k: int) -> "Affine":
+        return Affine(self.a * k, self.b * k)
+
+    @property
+    def is_const(self) -> bool:
+        return self.a == 0
+
+    def __repr__(self) -> str:
+        if self.a == 0:
+            return str(self.b)
+        s = "i" if self.a == 1 else f"{self.a}*i"
+        return s if self.b == 0 else f"{s}{self.b:+d}"
+
+
+def _literal_affine(x: Any) -> Affine | None:
+    try:
+        v = int(x)
+    except (TypeError, ValueError):
+        return None
+    if jnp.ndim(x) != 0:
+        return None
+    return Affine(0, v)
+
+
+class _AffineEnv:
+    """Symbolic affine propagation over jaxpr equations."""
+
+    def __init__(self, iter_var) -> None:
+        self._map: dict[Any, Affine] = {iter_var: Affine(1, 0)}
+        self._producer: dict[Any, Any] = {}
+
+    def lookup(self, atom) -> Affine | None:
+        if isinstance(atom, jcore.Literal):
+            return _literal_affine(atom.val)
+        return self._map.get(atom)
+
+    def process(self, eqn) -> None:
+        prim = eqn.primitive.name
+        outs = eqn.outvars
+        for ov in outs:
+            self._producer[ov] = eqn
+        if len(outs) != 1:
+            return
+        out = outs[0]
+        # Only scalar integer-ish values can be loop indices.
+        if getattr(out.aval, "shape", None) not in ((),):
+            return
+        ins = [self.lookup(v) for v in eqn.invars]
+        res: Affine | None = None
+        if prim == "add" and None not in ins:
+            res = ins[0] + ins[1]
+        elif prim == "sub" and None not in ins:
+            res = ins[0] - ins[1]
+        elif prim == "mul" and None not in ins:
+            if ins[0].is_const:
+                res = ins[1].scale(ins[0].b)
+            elif ins[1].is_const:
+                res = ins[0].scale(ins[1].b)
+        elif prim == "neg" and ins[0] is not None:
+            res = ins[0].scale(-1)
+        elif prim in ("convert_element_type", "copy", "squeeze", "stop_gradient"):
+            res = ins[0]
+        elif prim == "max" and None not in ins:
+            # clamp(i, 0) pattern: max(i, 0) with nonneg iteration space.
+            if ins[0].is_const and ins[0].b == 0:
+                res = ins[1]
+            elif ins[1].is_const and ins[1].b == 0:
+                res = ins[0]
+        elif prim == "select_n" and len(eqn.invars) == 3:
+            res = self._wrap_pattern(eqn)
+        if res is not None:
+            self._map[out] = res
+
+    def _wrap_pattern(self, eqn) -> Affine | None:
+        """Resolve ``select_n(v < 0, v, v + dim)`` → affine(v)."""
+        pred, case_f, case_t = eqn.invars
+        pred_eqn = self._producer.get(pred)
+        if pred_eqn is None or pred_eqn.primitive.name != "lt":
+            return None
+        lhs, rhs = pred_eqn.invars
+        rhs_aff = self.lookup(rhs)
+        if rhs_aff is None or not rhs_aff.is_const or rhs_aff.b != 0:
+            return None
+        # The non-negative branch is the lt's lhs; pick whichever case is it.
+        for case in (case_f, case_t):
+            if case is lhs:
+                return self.lookup(case)
+        # jnp sometimes converts dtype between lt and select; fall back to
+        # the case whose affine matches lhs's affine exactly.
+        lhs_aff = self.lookup(lhs)
+        if lhs_aff is None:
+            return None
+        for case in (case_f, case_t):
+            if self.lookup(case) == lhs_aff:
+                return lhs_aff
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Classification results
+# ---------------------------------------------------------------------------
+
+
+class ReadKind(enum.Enum):
+    NONE = "none"
+    SLICED = "sliced"    # every use is x[a*i+b] on the leading dim
+    STENCIL = "stencil"  # several unit-stride maps x[i+b0..i+bk] (halo)
+    WHOLE = "whole"
+
+
+class WriteKind(enum.Enum):
+    NONE = "none"
+    AT = "at"
+    PUT = "put"
+    RED = "red"
+
+
+class VarClass(enum.Enum):
+    UNUSED = "unused"
+    IN = "in"
+    OUT = "out"
+    INOUT = "inout"
+    REDUCTION = "reduction"
+
+
+@dataclasses.dataclass
+class ReadInfo:
+    kind: ReadKind
+    affine: Affine | None = None          # leading-dim index map for SLICED
+    affines: list | None = None           # all maps for STENCIL reads
+
+
+@dataclasses.dataclass
+class WriteInfo:
+    kind: WriteKind
+    affine: Affine | None = None          # index map for AT (None: non-affine)
+    value_shape: tuple[int, ...] = ()
+    value_dtype: Any = None
+    reduction_op: str | None = None
+
+
+@dataclasses.dataclass
+class VarInfo:
+    name: str
+    read: ReadInfo
+    write: WriteInfo
+    klass: VarClass
+    shape: tuple[int, ...] = ()
+    dtype: Any = None
+
+
+@dataclasses.dataclass
+class ContextInfo:
+    """Output of the Context Analysis stage for one parallel block."""
+
+    vars: dict[str, VarInfo]
+    env_keys: list[str]
+    update_keys: list[str]
+
+    def by_class(self, klass: VarClass) -> list[str]:
+        return [k for k, v in self.vars.items() if v.klass == klass]
+
+
+# ---------------------------------------------------------------------------
+# Analysis driver
+# ---------------------------------------------------------------------------
+
+
+def _aval_of(x: Any) -> jax.ShapeDtypeStruct:
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    arr = jnp.asarray(x)
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def analyze_context(program: pragma.ParallelFor, env: Mapping[str, Any],
+                    loop: LoopInfo) -> ContextInfo:
+    """Run the Context Analysis stage: trace the body once with an abstract
+    iterator, then classify every env buffer from the jaxpr."""
+    env_keys = list(env.keys())
+    env_avals = {k: _aval_of(v) for k, v in env.items()}
+
+    def traced(i, env_arrays):
+        return program.body(i, env_arrays)
+
+    i_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    closed, out_shape = jax.make_jaxpr(traced, return_shape=True)(i_aval, env_avals)
+    jaxpr = closed.jaxpr
+
+    # --- map env keys to invars -------------------------------------------
+    # Dicts flatten in sorted-key order; each env value must be one array.
+    env_leaves, _ = jax.tree_util.tree_flatten(env_avals)
+    n_env = len(env_leaves)
+    sorted_keys = sorted(env_avals.keys())
+    if n_env != len(sorted_keys):
+        raise LoopNotCanonical("env values must be single arrays (no nested pytrees)")
+    if len(jaxpr.invars) != 1 + n_env:
+        raise LoopNotCanonical(
+            "body must take (i, env) with env a flat dict of arrays; got "
+            f"{len(jaxpr.invars)} invars for {n_env} env leaves"
+        )
+    iter_var = jaxpr.invars[0]
+    var_of_key = {k: jaxpr.invars[1 + pos] for pos, k in enumerate(sorted_keys)}
+    key_of_var = {id(v): k for k, v in var_of_key.items()}
+
+    # --- affine propagation + read usage scan ------------------------------
+    aff = _AffineEnv(iter_var)
+    # read bookkeeping: key -> list of (eqn, affine-or-None) slice uses,
+    # plus a flag for non-slice uses.
+    sliced_uses: dict[str, list[Affine | None]] = {k: [] for k in env_keys}
+    whole_use: dict[str, bool] = {k: False for k in env_keys}
+
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        for pos, iv in enumerate(eqn.invars):
+            key = key_of_var.get(id(iv))
+            if key is None:
+                continue
+            if prim == "dynamic_slice" and pos == 0:
+                idx_atoms = eqn.invars[1:]
+                sizes = eqn.params["slice_sizes"]
+                shape = env_avals[key].shape
+                lead = aff.lookup(idx_atoms[0]) if idx_atoms else None
+                rest_ok = all(
+                    (a := aff.lookup(at)) is not None and a.is_const
+                    for at in idx_atoms[1:]
+                )
+                if (
+                    lead is not None
+                    and sizes
+                    and sizes[0] == 1
+                    and rest_ok
+                    and len(shape) == len(sizes)
+                ):
+                    sliced_uses[key].append(lead)
+                else:
+                    whole_use[key] = True
+            else:
+                whole_use[key] = True
+        aff.process(eqn)
+
+    # --- write classification from the returned update structure -----------
+    flat_shapes, out_tree = jax.tree_util.tree_flatten(out_shape)
+    positions = jax.tree_util.tree_unflatten(out_tree, list(range(len(flat_shapes))))
+    outvars = jaxpr.outvars
+    if not isinstance(positions, dict):
+        raise LoopNotCanonical("body must return a dict of omp updates")
+
+    writes: dict[str, WriteInfo] = {}
+    for key, upd in positions.items():
+        if isinstance(upd, pragma.At):
+            idx_pos, val_pos = upd.idx, upd.value
+            idx_atom = outvars[idx_pos]
+            write_aff = (
+                _literal_affine(idx_atom.val)
+                if isinstance(idx_atom, jcore.Literal)
+                else aff.lookup(idx_atom)
+            )
+            vshape = flat_shapes[val_pos]
+            writes[key] = WriteInfo(
+                WriteKind.AT,
+                affine=write_aff,
+                value_shape=tuple(vshape.shape),
+                value_dtype=vshape.dtype,
+            )
+        elif isinstance(upd, pragma.Put):
+            vshape = flat_shapes[upd.value]
+            writes[key] = WriteInfo(
+                WriteKind.PUT,
+                value_shape=tuple(vshape.shape),
+                value_dtype=vshape.dtype,
+            )
+        elif isinstance(upd, pragma.Red):
+            if key not in program.reduction:
+                raise LoopNotCanonical(
+                    f"omp.red() for {key!r} without a reduction clause "
+                    "(paper: reductions must be declared with reduction(op: var))"
+                )
+            vshape = flat_shapes[upd.value]
+            writes[key] = WriteInfo(
+                WriteKind.RED,
+                value_shape=tuple(vshape.shape),
+                value_dtype=vshape.dtype,
+                reduction_op=program.reduction[key],
+            )
+        else:
+            raise LoopNotCanonical(
+                f"update for {key!r} must be omp.at/omp.put/omp.red, got "
+                f"{type(upd).__name__}"
+            )
+
+    for key in program.reduction:
+        if key in writes and writes[key].kind != WriteKind.RED:
+            raise LoopNotCanonical(
+                f"{key!r} is declared as a reduction but written with "
+                f"{writes[key].kind.value}"
+            )
+
+    # --- assemble per-variable classification ------------------------------
+    infos: dict[str, VarInfo] = {}
+    all_keys = list(env_keys) + [k for k in writes if k not in env_avals]
+    for key in all_keys:
+        if key in env_avals:
+            shape, dtype = env_avals[key].shape, env_avals[key].dtype
+        else:
+            # Reduction outputs may be fresh (not pre-existing in env).
+            w = writes[key]
+            shape, dtype = w.value_shape, w.value_dtype
+        if key in env_avals and whole_use[key]:
+            read = ReadInfo(ReadKind.WHOLE)
+        elif key in env_avals and sliced_uses[key]:
+            affs = sliced_uses[key]
+            if any(a is None for a in affs):
+                read = ReadInfo(ReadKind.WHOLE)
+            elif len({(a.a, a.b) for a in affs}) == 1:
+                read = ReadInfo(ReadKind.SLICED, affs[0])
+            elif all(a.a == affs[0].a for a in affs):
+                # several unit-stride maps (x[i-1], x[i], x[i+1]):
+                # a stencil — distributable with a halo exchange
+                uniq = sorted({(a.a, a.b) for a in affs},
+                              key=lambda t: t[1])
+                read = ReadInfo(ReadKind.STENCIL, affs[0],
+                                [Affine(a, b) for a, b in uniq])
+            else:
+                read = ReadInfo(ReadKind.WHOLE)
+        else:
+            read = ReadInfo(ReadKind.NONE)
+
+        write = writes.get(key, WriteInfo(WriteKind.NONE))
+        if write.kind == WriteKind.RED:
+            klass = VarClass.REDUCTION
+        elif write.kind == WriteKind.NONE:
+            klass = VarClass.IN if read.kind != ReadKind.NONE else VarClass.UNUSED
+        elif read.kind == ReadKind.NONE:
+            klass = VarClass.OUT
+        else:
+            klass = VarClass.INOUT
+        infos[key] = VarInfo(
+            name=key, read=read, write=write, klass=klass,
+            shape=tuple(shape), dtype=dtype,
+        )
+
+    return ContextInfo(vars=infos, env_keys=env_keys, update_keys=list(writes))

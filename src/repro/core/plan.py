@@ -1,0 +1,256 @@
+"""Workload-distribution planning (paper §3.1.3).
+
+``make_plan`` fuses the three analysis stages (loop, context, schedule)
+into a :class:`DistPlan`: one strategy per shared variable plus the chunk
+assignment.  The strategies are the TPU-native renditions of the paper's
+transfer rules:
+
+==================  =====================================================
+strategy            paper rule it implements
+==================  =====================================================
+replicate_in        IN variable: master sends the buffer to every worker
+                    (SPMD: replicated ``in_specs``)
+shard_in            IN/INOUT read ``x[i]``: master sends only the chunk's
+                    slice (SPMD: cyclic-reshaped sharded input slab)
+shard_out_identity  OUT/INOUT write ``x[i]`` covering the whole leading
+                    dim: workers return only their slices (SPMD: sharded
+                    output slab, reassembled by layout)
+partial_identity    same but covering rows ``[b, b+T)`` only: slices are
+                    written back into the master copy
+scatter_psum        affine-but-strided write ``x[a*i+b]``: each worker
+                    returns a masked full-size buffer, combined with a
+                    psum and merged into the master copy (the paper's
+                    "transfer the full modified array" case)
+put_broadcast       iterator not on the leading dim: the full array is
+                    taken from the worker that ran the *last* chunk
+reduce_psum/...     reduction clause: identity-init partials + op-matched
+                    cross-device combine
+==================  =====================================================
+
+Writes whose index is not affine in the iterator are rejected with
+:class:`LoopNotCanonical` — the paper keeps such blocks as OpenMP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from repro.core import context as ctx_mod
+from repro.core import pragma, schedule
+from repro.core.context import ReadKind, VarClass, WriteKind
+from repro.core.loop import LoopInfo, LoopNotCanonical, analyze_loop
+
+
+@dataclasses.dataclass(frozen=True)
+class KAffine:
+    """Index map rebased to iteration number k in [0, T): ``a*k + b``."""
+
+    a: int
+    b: int
+
+    @classmethod
+    def from_iter_affine(cls, aff: ctx_mod.Affine, loop: LoopInfo) -> "KAffine":
+        return cls(a=aff.a * loop.step, b=aff.a * loop.start + aff.b)
+
+    def position(self, k: int) -> int:
+        return self.a * k + self.b
+
+    @property
+    def is_identity(self) -> bool:
+        return self.a == 1 and self.b == 0
+
+
+@dataclasses.dataclass
+class VarDecision:
+    key: str
+    klass: VarClass
+    in_strategy: str            # "replicate" | "shard" | "shard_halo"
+                                # | "none"
+    out_strategy: str           # "none" | "identity" | "partial" | "scatter"
+                                # | "put" | "reduce"
+    read_map: KAffine | None = None
+    write_map: KAffine | None = None
+    reduction_op: str | None = None
+    halo: tuple[int, int] | None = None   # (bk_min, bk_max) for stencils
+    note: str = ""
+
+
+@dataclasses.dataclass
+class DistPlan:
+    name: str
+    loop: LoopInfo
+    chunks: schedule.ChunkPlan
+    vars: dict[str, VarDecision]
+    axis: str
+    lowering: str
+    shard_inputs: bool
+    context: ctx_mod.ContextInfo
+
+    @property
+    def sharded_in_keys(self) -> list[str]:
+        return [k for k, v in self.vars.items()
+                if v.in_strategy in ("shard", "shard_halo")]
+
+    @property
+    def replicated_in_keys(self) -> list[str]:
+        return [k for k, v in self.vars.items() if v.in_strategy == "replicate"]
+
+
+def make_plan(
+    program: pragma.ParallelFor,
+    env: Mapping[str, Any],
+    num_devices: int,
+    *,
+    axis: str = "data",
+    lowering: str = "collective",
+    shard_inputs: bool = False,
+    paper_master_excluded: bool | None = None,
+) -> DistPlan:
+    if lowering not in ("collective", "master_worker"):
+        raise ValueError(f"unknown lowering {lowering!r}")
+    if paper_master_excluded is None:
+        paper_master_excluded = lowering == "master_worker"
+
+    loop = analyze_loop(program.start, program.stop, program.step)
+    ctx = ctx_mod.analyze_context(program, env, loop)
+
+    compute_devices = num_devices
+    if lowering == "master_worker":
+        if num_devices < 2:
+            raise LoopNotCanonical(
+                "master_worker lowering needs >= 2 devices (rank 0 is the master)"
+            )
+        if num_devices > 64:
+            raise LoopNotCanonical(
+                "master_worker lowering emits O(P) point-to-point permutes; "
+                "use lowering='collective' beyond 64 devices"
+            )
+        if paper_master_excluded:
+            compute_devices = num_devices - 1
+
+    chunks = schedule.make_chunk_plan(
+        loop, program.schedule, compute_devices,
+        paper_master_excluded=False,  # already folded into compute_devices
+    )
+
+    decisions: dict[str, VarDecision] = {}
+    t = loop.trip_count
+    for key, info in ctx.vars.items():
+        read_map = None
+        if info.read.kind == ReadKind.SLICED and info.read.affine is not None:
+            read_map = KAffine.from_iter_affine(info.read.affine, loop)
+
+        write_map = None
+        out_strategy = "none"
+        note = ""
+        w = info.write
+        if w.kind == WriteKind.AT:
+            if w.affine is None:
+                raise LoopNotCanonical(
+                    f"write index of {key!r} is not an affine function of the "
+                    "iterator (paper §3.1.3: block kept as OpenMP)"
+                )
+            write_map = KAffine.from_iter_affine(w.affine, loop)
+            if write_map.a == 0 and t > 1:
+                raise LoopNotCanonical(
+                    f"{key!r}: every iteration writes the same element "
+                    "(concurrent access; paper §3.1.3 refuses to divide)"
+                )
+            shape0 = info.shape[0] if info.shape else 0
+            if tuple(w.value_shape) != tuple(info.shape[1:]):
+                raise LoopNotCanonical(
+                    f"{key!r}: per-iteration value shape {w.value_shape} does "
+                    f"not match buffer row shape {info.shape[1:]}"
+                )
+            lo = min(write_map.position(0), write_map.position(max(0, t - 1)))
+            hi = max(write_map.position(0), write_map.position(max(0, t - 1)))
+            if t > 0 and (lo < 0 or hi >= shape0):
+                raise LoopNotCanonical(
+                    f"{key!r}: write positions [{lo}, {hi}] out of bounds for "
+                    f"leading dim {shape0}"
+                )
+            if write_map.is_identity and t == shape0:
+                out_strategy = "identity"
+            elif write_map.a == 1 and 0 <= write_map.b and write_map.b + t <= shape0:
+                out_strategy = "partial"
+                note = f"rows [{write_map.b}, {write_map.b + t}) updated in place"
+            else:
+                out_strategy = "scatter"
+                note = (
+                    "strided affine write: full-size masked psum combine "
+                    "(paper: whole modified array is transferred)"
+                )
+        elif w.kind == WriteKind.PUT:
+            out_strategy = "put"
+            if tuple(w.value_shape) != tuple(info.shape):
+                raise LoopNotCanonical(
+                    f"{key!r}: omp.put value shape {w.value_shape} != buffer "
+                    f"shape {info.shape}"
+                )
+            note = "full array taken from the worker owning the last iteration"
+        elif w.kind == WriteKind.RED:
+            out_strategy = "reduce"
+
+        # Input strategy: shard only when every read is the identity slice
+        # x[k-affine-identity]; stencils (several unit-stride maps) shard
+        # with a halo; everything else replicates (the paper's
+        # master->worker full-buffer send).
+        in_strategy = "none"
+        halo = None
+        if info.read.kind == ReadKind.WHOLE:
+            in_strategy = "replicate"
+        elif info.read.kind == ReadKind.SLICED:
+            eligible = (
+                shard_inputs
+                and lowering == "collective"
+                and read_map is not None
+                and read_map.is_identity
+                and info.shape
+                and info.shape[0] == t
+            )
+            in_strategy = "shard" if eligible else "replicate"
+        elif info.read.kind == ReadKind.STENCIL:
+            kmaps = [KAffine.from_iter_affine(a, loop)
+                     for a in info.read.affines]
+            eligible = (
+                shard_inputs
+                and lowering == "collective"
+                and all(m.a == 1 for m in kmaps)
+                and info.shape
+                # every read in-bounds across the iteration space
+                and min(m.b for m in kmaps) >= 0
+                and max(m.b for m in kmaps) + t <= info.shape[0]
+            )
+            if eligible:
+                in_strategy = "shard_halo"
+                halo = (min(m.b for m in kmaps), max(m.b for m in kmaps))
+                note = (note + "; " if note else "") + (
+                    f"stencil halo rows [{halo[0]}, {halo[1]}] exchanged "
+                    "instead of replicating the buffer (beyond-paper)")
+            else:
+                in_strategy = "replicate"
+        # partial/scatter merges re-read the master copy outside shard_map;
+        # no extra in-strategy needed for that.
+
+        decisions[key] = VarDecision(
+            key=key,
+            klass=info.klass,
+            in_strategy=in_strategy,
+            out_strategy=out_strategy,
+            read_map=read_map,
+            write_map=write_map,
+            reduction_op=w.reduction_op,
+            halo=halo,
+            note=note,
+        )
+
+    return DistPlan(
+        name=program.name,
+        loop=loop,
+        chunks=chunks,
+        vars=decisions,
+        axis=axis,
+        lowering=lowering,
+        shard_inputs=shard_inputs,
+        context=ctx,
+    )

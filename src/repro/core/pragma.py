@@ -1,0 +1,215 @@
+"""Pragma IR — the ``#pragma omp parallel for`` analogue for JAX loop nests.
+
+OMP2MPI (Saà-Garriga et al., 2015) consumes OpenMP annotations attached to
+C loops.  Here the annotation is a :class:`ParallelFor` program object that
+wraps a JAX loop *body* plus the clauses the paper recognises:
+
+* loop bounds (``start``/``stop``/``step`` — §3.1.2 Loop Analysis),
+* ``schedule(static|dynamic|guided[, chunk])`` (§3.1.3),
+* ``reduction(op: var)`` (§3.1.3, Table 3),
+* ``target mpi`` is implicit — :func:`repro.omp.to_mpi` performs the
+  transformation, mirroring the paper's ``target mpi`` clause.
+
+The body is a function ``body(i, env) -> {name: update}`` where ``env`` is
+the shared-memory environment (a dict of arrays) and each update is one of
+
+* :func:`at`   — ``var[idx] = value`` (idx may be any affine expr of ``i``),
+* :func:`put`  — whole-array write whose slot does not depend on ``i``
+  (the paper's "iterator not on first dimension" rule: the full array is
+  taken from the worker that executes the *last* iteration),
+* :func:`red`  — a value folded into a ``reduction`` clause variable.
+
+Reads are *not* declared: they are recovered automatically from the traced
+jaxpr by :mod:`repro.core.context` (the paper's Context Analysis stage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+
+
+# ---------------------------------------------------------------------------
+# Schedule clause
+# ---------------------------------------------------------------------------
+
+STATIC = "static"
+DYNAMIC = "dynamic"
+GUIDED = "guided"
+
+_VALID_SCHEDULES = (STATIC, DYNAMIC, GUIDED)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """``schedule(kind[, chunk])`` clause.
+
+    ``chunk=None`` derives the chunk size the way the paper does:
+    * static  -> one contiguous block per rank,
+    * dynamic -> ``N / ranks / 10`` (Table 2 line 4 over-decomposition),
+    * guided  -> ``N / (2 * ranks)`` (flattened guided; see DESIGN.md).
+    """
+
+    kind: str = DYNAMIC
+    chunk: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in _VALID_SCHEDULES:
+            raise ValueError(
+                f"schedule kind must be one of {_VALID_SCHEDULES}, got {self.kind!r}"
+            )
+        if self.chunk is not None and self.chunk < 1:
+            raise ValueError(f"schedule chunk must be >= 1, got {self.chunk}")
+
+
+def static(chunk: int | None = None) -> Schedule:
+    return Schedule(STATIC, chunk)
+
+
+def dynamic(chunk: int | None = None) -> Schedule:
+    return Schedule(DYNAMIC, chunk)
+
+
+def guided(chunk: int | None = None) -> Schedule:
+    return Schedule(GUIDED, chunk)
+
+
+# ---------------------------------------------------------------------------
+# Update wrappers (the write side of the dataflow; reads are inferred)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class At:
+    """``var[idx] = value`` — idx is (an affine function of) the iterator."""
+
+    idx: Any
+    value: Any
+
+    def tree_flatten(self):
+        return (self.idx, self.value), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Put:
+    """Whole-array write; the array produced by the last iteration wins."""
+
+    value: Any
+
+    def tree_flatten(self):
+        return (self.value,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Red:
+    """Per-iteration contribution to a ``reduction`` clause variable."""
+
+    value: Any
+
+    def tree_flatten(self):
+        return (self.value,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def at(idx: Any, value: Any) -> At:
+    return At(idx, value)
+
+
+def put(value: Any) -> Put:
+    return Put(value)
+
+
+def red(value: Any) -> Red:
+    return Red(value)
+
+
+# ---------------------------------------------------------------------------
+# ParallelFor program object
+# ---------------------------------------------------------------------------
+
+
+class ParallelFor:
+    """A ``#pragma omp parallel for`` block over a JAX body.
+
+    Calling the object executes the *shared-memory* ("OpenMP") semantics on
+    the local device — the reference against which the MPI transformation
+    is validated (the paper's "correct by construction" claim is checked
+    as ``to_mpi(pf)(env) == pf(env)`` in the test-suite).
+    """
+
+    def __init__(
+        self,
+        body: Callable[..., Mapping[str, Any]],
+        *,
+        start: int = 0,
+        stop: int | None = None,
+        step: int = 1,
+        schedule: Schedule | str | None = None,
+        reduction: Mapping[str, str] | None = None,
+        name: str | None = None,
+    ) -> None:
+        if stop is None:
+            raise ValueError("parallel_for requires a static 'stop' bound")
+        if isinstance(schedule, str):
+            schedule = Schedule(schedule)
+        self.body = body
+        self.start = int(start)
+        self.stop = int(stop)
+        self.step = int(step)
+        self.schedule = schedule or Schedule(DYNAMIC)
+        self.reduction = dict(reduction or {})
+        self.name = name or getattr(body, "__name__", "parallel_for")
+
+    # The single-device reference execution lives in transform.py to keep
+    # the IR free of execution machinery; bound lazily to avoid a cycle.
+    def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
+        from repro.core import transform as _transform
+
+        return _transform.run_reference(self, env)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        red_s = f", reduction={self.reduction}" if self.reduction else ""
+        return (
+            f"ParallelFor({self.name}, range({self.start}, {self.stop}, "
+            f"{self.step}), schedule={self.schedule.kind}{red_s})"
+        )
+
+
+def parallel_for(
+    *,
+    start: int = 0,
+    stop: int | None = None,
+    step: int = 1,
+    schedule: Schedule | str | None = None,
+    reduction: Mapping[str, str] | None = None,
+    name: str | None = None,
+) -> Callable[[Callable], ParallelFor]:
+    """Decorator form: ``@omp.parallel_for(stop=N, schedule=omp.dynamic())``."""
+
+    def wrap(body: Callable) -> ParallelFor:
+        return ParallelFor(
+            body,
+            start=start,
+            stop=stop,
+            step=step,
+            schedule=schedule,
+            reduction=reduction,
+            name=name,
+        )
+
+    return wrap

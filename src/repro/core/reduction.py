@@ -1,0 +1,88 @@
+"""Reduction clause lowering (paper §3.1.3, Table 3).
+
+OMP2MPI initialises the reduction variable with the operation's identity
+(0 for ``+``/``-``, 1 for ``*``/``/``) and folds worker partials into the
+master copy.  The TPU-native rendition combines chunk partials locally and
+crosses devices with the matching collective (``psum``/``pmax``/``pmin``;
+``*`` has no dedicated all-reduce, so partials are all-gathered and folded
+locally — P scalars, negligible traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+_SUM_OPS = ("+", "-")  # '-' reduces by accumulating partial sums, like OpenMP
+_PROD_OPS = ("*", "/")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionOp:
+    name: str
+    identity: float
+    local_fold: Callable[[Any, int], Any]     # fold an axis of partials
+    pairwise: Callable[[Any, Any], Any]       # combine two partials
+    collective: str                           # "psum" | "pmax" | "pmin" | "gather"
+
+
+def _fold_sum(x, axis):
+    return jnp.sum(x, axis=axis)
+
+
+def _fold_prod(x, axis):
+    return jnp.prod(x, axis=axis)
+
+
+def _fold_max(x, axis):
+    return jnp.max(x, axis=axis)
+
+
+def _fold_min(x, axis):
+    return jnp.min(x, axis=axis)
+
+
+_REDUCTIONS: dict[str, ReductionOp] = {
+    "+": ReductionOp("+", 0.0, _fold_sum, lambda a, b: a + b, "psum"),
+    "-": ReductionOp("-", 0.0, _fold_sum, lambda a, b: a + b, "psum"),
+    "*": ReductionOp("*", 1.0, _fold_prod, lambda a, b: a * b, "gather"),
+    "/": ReductionOp("/", 1.0, _fold_prod, lambda a, b: a * b, "gather"),
+    "max": ReductionOp("max", -jnp.inf, _fold_max, jnp.maximum, "pmax"),
+    "min": ReductionOp("min", jnp.inf, _fold_min, jnp.minimum, "pmin"),
+}
+
+
+def get_reduction(op: str) -> ReductionOp:
+    try:
+        return _REDUCTIONS[op]
+    except KeyError:
+        raise ValueError(
+            f"unsupported reduction op {op!r}; supported: {sorted(_REDUCTIONS)}"
+        ) from None
+
+
+def identity_like(op: ReductionOp, value: Any):
+    """Identity element broadcast to ``value``'s shape/dtype (paper: the
+    starting value of the reduced variable)."""
+    dtype = jnp.result_type(value)
+    if op.name in ("max", "min") and not jnp.issubdtype(dtype, jnp.floating):
+        info = jnp.iinfo(dtype)
+        ident = info.min if op.name == "max" else info.max
+    else:
+        ident = op.identity
+    return jnp.full(jnp.shape(value), ident, dtype=dtype)
+
+
+def cross_device_combine(op: ReductionOp, partial: Any, axis_name: str):
+    """Combine per-device partials across ``axis_name`` inside shard_map."""
+    if op.collective == "psum":
+        return jax.lax.psum(partial, axis_name)
+    if op.collective == "pmax":
+        return jax.lax.pmax(partial, axis_name)
+    if op.collective == "pmin":
+        return jax.lax.pmin(partial, axis_name)
+    # '*' (and '/'): all-gather the scalar partials and fold locally.
+    gathered = jax.lax.all_gather(partial, axis_name)  # (P, ...)
+    return op.local_fold(gathered, 0)

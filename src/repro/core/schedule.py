@@ -1,0 +1,108 @@
+"""Workload Distribution — chunking math (paper §3.1.3).
+
+The paper splits the iteration space into chunks and deals them to worker
+ranks.  ``schedule(dynamic)`` (the default) over-decomposes by 10x —
+``partSize = N / (size-1) / 10`` (Table 2, line 4) — so slow workers get
+fewer chunks; ``schedule(static)`` deals one contiguous block per rank in
+round-robin; ``guided`` starts large and shrinks.
+
+TPU SPMD adaptation (DESIGN.md §2): there is no demand-driven dispatch, so
+every schedule becomes a *deterministic chunk→device assignment*:
+
+* static (no chunk): one contiguous block per device,
+* static (chunk=c) / dynamic / guided: cyclic assignment — chunk ``j``
+  lands on device ``j % P`` so each device sees a representative sample of
+  the iteration space (same load-balancing effect the 10x split buys).
+
+Cyclic assignment of equal-size chunks has a crucial structural property:
+the global iteration space padded to ``K' * c`` (K' a multiple of P)
+reshapes to ``(K'/P, P, c)`` whose *middle axis is the device axis* — so a
+"chunk-distributed write" is just an array sharded on that axis, and the
+whole master/worker exchange of the paper becomes layout, not messages.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import pragma
+from repro.core.loop import LoopInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """Deterministic chunk→device assignment for one parallel block.
+
+    Iteration ``k`` (in ``[0, trip_count)``) lives in chunk ``k // chunk``;
+    chunk ``j`` is executed by device ``j % num_devices`` as its local
+    chunk number ``j // num_devices``.
+    """
+
+    trip_count: int
+    num_devices: int
+    chunk: int                 # c — iterations per chunk
+    num_chunks: int            # K' — padded to a multiple of num_devices
+    local_chunks: int          # n_loc = K' / P
+    padded_trip: int           # K' * c >= trip_count
+
+    @property
+    def padding(self) -> int:
+        return self.padded_trip - self.trip_count
+
+    def owner_of_iteration(self, k: int) -> int:
+        return (k // self.chunk) % self.num_devices
+
+    def owner_of_last_iteration(self) -> int:
+        if self.trip_count == 0:
+            return 0
+        return self.owner_of_iteration(self.trip_count - 1)
+
+    def global_chunk(self, device: int, local: int) -> int:
+        return local * self.num_devices + device
+
+
+def paper_chunk_size(trip_count: int, ranks: int, *,
+                     master_excluded: bool = False) -> int:
+    """The paper's Table 2 line 4: ``partSize = N / (size-1) / 10``.
+
+    ``master_excluded=True`` reproduces the MPI formula exactly (rank 0
+    does not compute); the SPMD variant uses all P devices.
+    """
+    workers = max(1, ranks - 1 if master_excluded else ranks)
+    return max(1, trip_count // workers // 10)
+
+
+def guided_chunk_size(trip_count: int, ranks: int) -> int:
+    """Flattened guided schedule: first-round guided chunk N/(2P)."""
+    return max(1, trip_count // max(1, 2 * ranks))
+
+
+def make_chunk_plan(
+    loop: LoopInfo,
+    schedule: pragma.Schedule,
+    num_devices: int,
+    *,
+    paper_master_excluded: bool = False,
+) -> ChunkPlan:
+    t = loop.trip_count
+    p = max(1, num_devices)
+    if schedule.chunk is not None:
+        c = schedule.chunk
+    elif schedule.kind == pragma.STATIC:
+        c = max(1, -(-t // p))  # one block per device
+    elif schedule.kind == pragma.DYNAMIC:
+        c = paper_chunk_size(t, p, master_excluded=paper_master_excluded)
+    elif schedule.kind == pragma.GUIDED:
+        c = guided_chunk_size(t, p)
+    else:  # pragma: no cover - Schedule validates kinds
+        raise ValueError(schedule.kind)
+    c = max(1, min(c, max(1, t)))
+    k = max(1, -(-t // c))          # chunks needed
+    k_pad = -(-k // p) * p          # padded to multiple of P
+    return ChunkPlan(
+        trip_count=t,
+        num_devices=p,
+        chunk=c,
+        num_chunks=k_pad,
+        local_chunks=k_pad // p,
+        padded_trip=k_pad * c,
+    )

@@ -1,0 +1,199 @@
+"""Tensor-level distribution planning: "pragmas for tensors".
+
+A matmul *is* a parallel loop nest, so the paper's derivation generalises:
+every model tensor (param or activation) carries a tuple of *logical axis*
+names — the loop variables of the nest it participates in — and the
+planner maps logical axes onto mesh axes, exactly as
+:mod:`repro.core.plan` maps the explicit-loop iteration space onto the
+device axis:
+
+* a dim whose logical axis maps to a mesh axis is *chunk-distributed*
+  (the paper's OUT-slice rule -> sharded),
+* a dim with no mapping is *replicated* (the paper's IN-broadcast rule),
+* contractions over a mapped axis become ``psum``-style partials (the
+  reduction clause) — inserted by GSPMD at the jit level.
+
+Divisibility-aware first-fit: a rule only fires when the dim size is
+divisible by the mesh-axis extent (e.g. GQA kv=8 heads cannot shard over
+a 16-way model axis -> replicated, noted in EXPERIMENTS.md); each mesh
+axis is used at most once per tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis vocabulary used by the model stack.
+BATCH = "batch"
+SEQ = "seq"
+SEQ_KV = "seq_kv"
+D_MODEL = "d_model"
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+D_FF = "d_ff"
+VOCAB = "vocab"
+EXPERTS = "experts"
+D_EXPERT = "d_expert"
+LAYERS = "layers"          # the stacked-scan leading dim: never sharded
+D_INNER = "d_inner"        # mamba
+D_STATE = "d_state"
+CONV = "conv"
+GROUPS = "groups"          # MoE dispatch groups
+FRAMES = "frames"          # whisper encoder positions
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorPlan:
+    """Maps logical axes to (prioritised lists of) mesh axes."""
+
+    mesh_axes: tuple[str, ...]
+    mesh_shape: tuple[int, ...]
+    rules: Mapping[str, tuple]     # logical -> tuple of candidates; each
+                                   # candidate is a mesh axis or axis-tuple
+    mesh: Mesh | None = None       # needed for in-jit constraints
+
+    def _axis_size(self, axis) -> int:
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self._axis_size(a)
+            return n
+        return self.mesh_shape[self.mesh_axes.index(axis)]
+
+    def spec(self, shape: Sequence[int], axes: Sequence[str | None]) -> P:
+        """Divisibility-aware first-fit assignment of mesh axes to dims."""
+        if len(shape) != len(axes):
+            raise ValueError(f"shape {shape} vs logical axes {axes}")
+        used: set[str] = set()
+        out: list = []
+        for size, logical in zip(shape, axes):
+            assigned = None
+            for cand in self.rules.get(logical, ()):
+                flat = cand if isinstance(cand, tuple) else (cand,)
+                if any(a in used or a not in self.mesh_axes for a in flat):
+                    continue
+                if size % self._axis_size(cand) != 0:
+                    continue
+                assigned = cand
+                used.update(flat)
+                break
+            out.append(assigned)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, mesh: Mesh, shape, axes) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(shape, axes))
+
+    def constrain(self, x, axes):
+        """with_sharding_constraint by logical axes (inside jit)."""
+        spec = self.spec(x.shape, axes)
+        if self.mesh is None:
+            return jax.lax.with_sharding_constraint(x, spec)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def tree_specs(self, params, param_axes):
+        """PartitionSpec tree for a (params, axes) pair of pytrees."""
+        return jax.tree_util.tree_map(
+            lambda p, a: self.spec(p.shape, a),
+            params, param_axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        )
+
+
+def _dp_axes(mesh_axes: tuple[str, ...]):
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def make_train_plan(mesh_axes, mesh_shape, *, zero3: bool = False,
+                    strategy: str = "dp_tp",
+                    mesh: Mesh | None = None) -> TensorPlan:
+    """DP over (pod,data), TP/EP over model; ZeRO-3 adds param sharding
+    over the data axes (gradients/optimizer state inherit it).
+
+    ``strategy="dp_only"``: batch over EVERY axis (model included) and
+    fully-sharded params over the same — the right layout for models too
+    small/narrow to TP (gemma3's 4 heads on a 16-way model axis;
+    EXPERIMENTS.md §Perf-B)."""
+    dp = _dp_axes(mesh_axes)
+    if strategy == "dp_only":
+        all_axes = tuple(mesh_axes)
+        rules = {
+            BATCH: (all_axes, dp, "data"),
+            # fully-sharded params (ZeRO-3 over the whole mesh)
+            D_MODEL: (all_axes, dp, "data"),
+            VOCAB: (all_axes, dp, "data"),
+            D_FF: ("model",),
+            D_INNER: ("model",),
+            GROUPS: (all_axes, dp, "data"),
+        }
+        return TensorPlan(tuple(mesh_axes), tuple(mesh_shape), rules, mesh)
+    rules = {
+        BATCH: (dp, "data"),
+        HEADS: ("model",),
+        KV_HEADS: ("model",),
+        D_FF: ("model",),
+        D_EXPERT: ("model",),
+        EXPERTS: ("model", ),
+        VOCAB: ("model",),
+        D_INNER: ("model",),
+        D_STATE: ("model",),
+        GROUPS: (dp, "data"),
+        # SEQ: set by seq_parallel (Megatron-SP): residual activations
+        # shard their sequence dim over the model axis between TP blocks,
+        # turning each boundary all-reduce into reduce-scatter+all-gather
+        # (half the bytes, spread over all links).
+    }
+    if zero3:
+        # FSDP: the d_model dim of params shards over the data axes.
+        rules[D_MODEL] = (dp, "data")
+    return TensorPlan(tuple(mesh_axes), tuple(mesh_shape), rules, mesh)
+
+
+def make_serve_plan(mesh_axes, mesh_shape, *, shard_seq: bool = False,
+                    decode: bool = False,
+                    mesh: Mesh | None = None) -> TensorPlan:
+    """Inference plan. ``shard_seq`` (long_500k, batch=1): sequence/KV
+    sharded over the data axes instead of batch (sequence parallelism)."""
+    dp = _dp_axes(mesh_axes)
+    rules = {
+        BATCH: () if shard_seq else (dp, "data"),
+        # KV caches shard their sequence dim: over everything available
+        # in shard_seq mode (batch=1), over the model axis otherwise —
+        # a batch-only-sharded 32k cache is 43 GB/chip on qwen1.5-110b
+        # (EXPERIMENTS.md §Dry-run); attention over the sharded dim
+        # becomes flash-decoding-style split-K with a psum combine.
+        SEQ_KV: (dp + ("model",), dp, "model") if shard_seq
+                else ("model",),
+        SEQ: (dp, "data") if shard_seq else (),
+        HEADS: ("model",),
+        KV_HEADS: ("model",),
+        # head_dim fallback (36H / 12H / kv=8 archs): contraction-sharded
+        # attention with psum partials. DECODE ONLY — per-token scores are
+        # tiny there; under chunked prefill/train attention the score-tile
+        # psums explode (17.5 TB wire on starcoder2 prefill, §Dry-run).
+        HEAD_DIM: ("model",) if decode else (),
+        # serve params also shard d_model over the data axes (weight-
+        # resident would need 14 GB/chip on qwen1.5-110b); for decode the
+        # partitioner reshards the tiny activations instead of gathering
+        # weights, for prefill this is ZeRO-style gathering (compute-bound)
+        D_MODEL: (dp, "data"),
+        D_FF: ("model",),
+        # expert weights shard 2D (experts x d_expert): one model-axis
+        # shard of experts would keep a full d_model*d_expert per chip
+        # (94 GB/chip on jamba long_500k — EXPERIMENTS.md §Dry-run)
+        D_EXPERT: ("model", dp, "data"),
+        EXPERTS: ("model",),
+        VOCAB: ("model",),
+        D_INNER: ("model",),
+        D_STATE: ("model",),
+        GROUPS: () if shard_seq else (dp, "data"),
+    }
+    return TensorPlan(tuple(mesh_axes), tuple(mesh_shape), rules, mesh)

@@ -1,0 +1,624 @@
+"""OMP→"MPI" code generation (paper §3.1.3–3.1.4).
+
+Two executors for a :class:`~repro.core.pragma.ParallelFor` program:
+
+* :func:`run_reference` — the *shared-memory* ("OpenMP") semantics on the
+  local device.  This is the oracle: the paper's "correct by construction"
+  claim is validated as ``to_mpi(pf)(env) == pf(env)``.
+
+* :func:`to_mpi` — the transformation.  Produces a
+  :class:`DistributedProgram` that executes the block over a mesh axis
+  under ``jax.shard_map`` using the :class:`~repro.core.plan.DistPlan`
+  strategies.  Two lowerings:
+
+  - ``"collective"`` — TPU-native: chunk-cyclic layout + balanced
+    collectives (psum / sharded slabs).  This is the production path.
+  - ``"master_worker"`` — paper-faithful: rank 0 owns the shared memory;
+    every IN buffer is *sent* from rank 0 to each worker and every OUT
+    slab is sent back and re-broadcast, as explicit
+    ``collective-permute`` pairs.  It reproduces the communication shape
+    of the paper's Fig. 1b (all traffic through the master's links) and
+    exists as the measurable baseline for EXPERIMENTS.md §Perf-A.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import pragma, reduction as red_mod
+from repro.core.context import ReadKind, VarClass, WriteKind
+from repro.core.loop import LoopNotCanonical, analyze_loop
+from repro.core.plan import DistPlan, make_plan
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory reference executor ("the OpenMP block")
+# ---------------------------------------------------------------------------
+
+
+def run_reference(program: pragma.ParallelFor, env: Mapping[str, Any]) -> dict:
+    """Execute with OpenMP shared-memory semantics on the local device.
+
+    Reads observe the pre-loop environment (iterations are concurrent in
+    OpenMP; racy read-after-write across iterations is UB there and
+    unsupported here — see DESIGN.md).
+    """
+    loop = analyze_loop(program.start, program.stop, program.step)
+    env = {k: jnp.asarray(v) for k, v in env.items()}
+    out = dict(env)
+    t = loop.trip_count
+    if t == 0:
+        return out
+
+    ivec = program.start + program.step * jnp.arange(t, dtype=jnp.int32)
+    updates = jax.vmap(lambda i: program.body(i, env))(ivec)
+    for key, upd in updates.items():
+        if isinstance(upd, pragma.At):
+            out[key] = out[key].at[upd.idx].set(upd.value)
+        elif isinstance(upd, pragma.Put):
+            out[key] = upd.value[t - 1]
+        elif isinstance(upd, pragma.Red):
+            rop = red_mod.get_reduction(program.reduction[key])
+            folded = rop.local_fold(upd.value, 0)
+            if key in env:
+                folded = rop.pairwise(env[key], folded)
+            out[key] = folded
+        else:
+            raise LoopNotCanonical(
+                f"update for {key!r} must be omp.at/omp.put/omp.red"
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sliced-read substitution (paper: send only the needed slice)
+# ---------------------------------------------------------------------------
+
+
+class SubstitutionFailed(Exception):
+    pass
+
+
+class _ShiftedArray:
+    """Stands in for a shared buffer whose only accesses are ``x[i]``-style
+    identity reads; serves them from the local chunk slab instead."""
+
+    def __init__(self, slab, k_offset, virtual_shape, dtype):
+        self._slab = slab
+        self._k0 = k_offset
+        self.shape = virtual_shape
+        self.dtype = dtype
+        self.ndim = len(virtual_shape)
+
+    def __getitem__(self, idx):
+        if isinstance(idx, tuple):
+            first, rest = idx[0], tuple(idx[1:])
+        else:
+            first, rest = idx, ()
+        row = jax.lax.dynamic_index_in_dim(
+            self._slab, jnp.asarray(first - self._k0, jnp.int32), 0,
+            keepdims=False,
+        )
+        return row[rest] if rest else row
+
+    def __len__(self):
+        return self.shape[0]
+
+    def _no(self, *a, **k):  # pragma: no cover - guard path
+        raise SubstitutionFailed(
+            "sliced-read substitution saw a non-getitem use; this buffer "
+            "should have been classified as a whole-array read"
+        )
+
+    __add__ = __radd__ = __mul__ = __rmul__ = __sub__ = __rsub__ = _no
+    __truediv__ = __rtruediv__ = __matmul__ = __rmatmul__ = _no
+    __neg__ = __pow__ = __array__ = _no
+
+
+# ---------------------------------------------------------------------------
+# Distributed program
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistributedProgram:
+    """The generated "MPI" program for one parallel block."""
+
+    program: pragma.ParallelFor
+    mesh: Mesh
+    plan: DistPlan | None
+    axis: str = "data"
+    lowering: str = "collective"
+    shard_inputs: bool = False
+    keep_sharded: bool = False
+    unroll_chunks: bool = False
+    paper_master_excluded: bool | None = None
+
+    def __call__(self, env: Mapping[str, Any]) -> dict:
+        return _execute(self, {k: jnp.asarray(v) for k, v in env.items()})
+
+    def report(self) -> str:
+        from repro.core import report as report_mod
+
+        if self.plan is None:
+            raise ValueError("call the program (or pass env_like) to build "
+                             "the plan before asking for a report")
+        return report_mod.render_plan(self.plan)
+
+
+def to_mpi(
+    program: pragma.ParallelFor,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    lowering: str = "collective",
+    shard_inputs: bool = False,
+    keep_sharded: bool = False,
+    unroll_chunks: bool = False,
+    env_like: Mapping[str, Any] | None = None,
+    paper_master_excluded: bool | None = None,
+) -> DistributedProgram:
+    """Transform an OpenMP-annotated block into a distributed program.
+
+    ``env_like`` (shapes only) lets the plan be built eagerly; otherwise it
+    is built on first call.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
+    num = mesh.shape[axis]
+    plan = None
+    if env_like is not None:
+        plan = make_plan(
+            program, env_like, num, axis=axis, lowering=lowering,
+            shard_inputs=shard_inputs,
+            paper_master_excluded=paper_master_excluded,
+        )
+    return DistributedProgram(
+        program=program, mesh=mesh, plan=plan, axis=axis, lowering=lowering,
+        shard_inputs=shard_inputs, keep_sharded=keep_sharded,
+        unroll_chunks=unroll_chunks,
+        paper_master_excluded=paper_master_excluded,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def _pad_reshape(x, plan):
+    """(T, *rest) -> (n_loc, P_compute, c, *rest) chunk-cyclic layout."""
+    ch = plan.chunks
+    pad = ch.padded_trip - x.shape[0]
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x.reshape((ch.local_chunks, ch.num_devices, ch.chunk) + x.shape[1:])
+
+
+def _halo_slabs(x, plan, halo):
+    """(N, *rest) -> (n_loc, P, c + halo_width, *rest): each chunk's slab
+    carries its read window [k*c + b_min, (k+1)*c - 1 + b_max] — the
+    stencil halo exchange (rows duplicated at chunk edges)."""
+    ch = plan.chunks
+    b_min, b_max = halo
+    width = ch.chunk + (b_max - b_min)
+    rows = (np.arange(ch.num_chunks)[:, None] * ch.chunk + b_min
+            + np.arange(width)[None, :])
+    rows = np.clip(rows, 0, x.shape[0] - 1)
+    slab = x[rows]                                   # (K', width, *rest)
+    return slab.reshape((ch.local_chunks, ch.num_devices, width)
+                        + x.shape[1:])
+
+
+def _unpad_flat(slabs, plan, t):
+    """(n_loc, P_compute, c, *rest) -> (T, *rest)."""
+    ch = plan.chunks
+    flat = slabs.reshape((ch.padded_trip,) + slabs.shape[3:])
+    return flat[:t]
+
+
+def _execute(dp: DistributedProgram, env: dict) -> dict:
+    program = dp.program
+    if dp.plan is None:
+        dp.plan = make_plan(
+            program, env, dp.mesh.shape[dp.axis], axis=dp.axis,
+            lowering=dp.lowering, shard_inputs=dp.shard_inputs,
+            paper_master_excluded=dp.paper_master_excluded,
+        )
+    plan = dp.plan
+    t = plan.loop.trip_count
+    out = dict(env)
+    if t == 0:
+        for key, dec in plan.vars.items():
+            if dec.out_strategy == "reduce":
+                rop = red_mod.get_reduction(dec.reduction_op)
+                info = plan.context.vars[key]
+                zero = red_mod.identity_like(
+                    rop, jnp.zeros(info.write.value_shape, info.write.value_dtype))
+                out[key] = rop.pairwise(env[key], zero) if key in env else zero
+        return out
+
+    if plan.lowering == "collective":
+        return _execute_collective(dp, env)
+    return _execute_master_worker(dp, env)
+
+
+def _chunk_iteration_vectors(plan, j, dtype=jnp.int32):
+    """Iteration numbers, validity mask and clamped loop indices of chunk j."""
+    c = plan.chunks.chunk
+    t = plan.loop.trip_count
+    ks = j * c + jnp.arange(c, dtype=dtype)
+    valid = ks < t
+    kc = jnp.minimum(ks, t - 1)
+    ivec = plan.loop.start + plan.loop.step * kc
+    return ks, valid, kc, ivec
+
+
+def _make_env_sub(plan, env_in, slabs_q, k0):
+    """Environment seen by the body inside one chunk."""
+    env_sub: dict[str, Any] = {}
+    for key in plan.context.env_keys:
+        dec = plan.vars[key]
+        info = plan.context.vars[key]
+        if dec.in_strategy == "shard":
+            env_sub[key] = _ShiftedArray(
+                slabs_q[key], k0, info.shape, info.dtype)
+        elif dec.in_strategy == "shard_halo":
+            # slab row t holds position k0 + b_min + t
+            env_sub[key] = _ShiftedArray(
+                slabs_q[key], k0 + dec.halo[0], info.shape, info.dtype)
+        elif dec.in_strategy == "replicate":
+            env_sub[key] = env_in[key]
+        else:  # unused inside the body: placeholder, DCE'd by XLA
+            env_sub[key] = jnp.zeros(info.shape, info.dtype)
+    return env_sub
+
+
+def _apply_chunk_updates(plan, updates, carry, ys, j, valid, shapes):
+    """Fold one chunk's updates into the scan carry / per-chunk outputs."""
+    t = plan.loop.trip_count
+    for key, dec in plan.vars.items():
+        if dec.out_strategy == "none":
+            continue
+        upd = updates[key]
+        if dec.out_strategy in ("identity", "partial"):
+            ys[key] = upd.value
+        elif dec.out_strategy == "scatter":
+            shape0 = shapes[key][0]
+            # positions from true iteration numbers of this chunk
+            ks = j * plan.chunks.chunk + jnp.arange(plan.chunks.chunk)
+            pos = dec.write_map.a * ks + dec.write_map.b
+            pos = jnp.where(valid, pos, shape0)  # OOB -> dropped
+            buf, mask = carry[key]
+            buf = buf.at[pos].set(upd.value, mode="drop")
+            mask = mask.at[pos].set(True, mode="drop")
+            carry[key] = (buf, mask)
+        elif dec.out_strategy == "put":
+            j_star = (t - 1) // plan.chunks.chunk
+            lane = (t - 1) - j_star * plan.chunks.chunk
+            row = jax.lax.dynamic_index_in_dim(upd.value, lane, 0, keepdims=False)
+            carry[key] = jnp.where(j == j_star, row, carry[key])
+        elif dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            ident = red_mod.identity_like(rop, upd.value)
+            vmask = valid.reshape((-1,) + (1,) * (upd.value.ndim - 1))
+            contrib = jnp.where(vmask, upd.value, ident)
+            part = rop.local_fold(contrib, 0)
+            carry[key] = rop.pairwise(carry[key], part)
+    return carry, ys
+
+
+def _init_carry(plan):
+    carry: dict[str, Any] = {}
+    for key, dec in plan.vars.items():
+        info = plan.context.vars[key]
+        if dec.out_strategy == "scatter":
+            carry[key] = (
+                jnp.zeros(info.shape, info.dtype),
+                jnp.zeros((info.shape[0],), jnp.bool_),
+            )
+        elif dec.out_strategy == "put":
+            carry[key] = jnp.zeros(info.shape, info.dtype)
+        elif dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            carry[key] = red_mod.identity_like(
+                rop, jnp.zeros(info.write.value_shape, info.write.value_dtype))
+    return carry
+
+
+def _run_local_chunks(plan, program, env_in, slab_stacks, worker_index,
+                      unroll_chunks=False):
+    """Scan this device's chunks; returns (carry, ys_stacked)."""
+    ch = plan.chunks
+    shapes = {k: plan.context.vars[k].shape for k in plan.vars}
+    carry0 = _init_carry(plan)
+
+    def one_chunk(carry, q):
+        j = q * ch.num_devices + worker_index
+        k0 = j * ch.chunk
+        ks, valid, kc, ivec = _chunk_iteration_vectors(plan, j)
+        slabs_q = {k: jax.lax.dynamic_index_in_dim(v, q, 0, keepdims=False)
+                   for k, v in slab_stacks.items()}
+        env_sub = _make_env_sub(plan, env_in, slabs_q, k0)
+        updates = jax.vmap(lambda i: program.body(i, env_sub))(ivec)
+        ys: dict[str, Any] = {}
+        carry, ys = _apply_chunk_updates(plan, updates, carry, ys, j, valid, shapes)
+        return carry, ys
+
+    if ch.local_chunks == 1:
+        carry, ys = one_chunk(carry0, jnp.int32(0))
+        ys = {k: v[None] for k, v in ys.items()}
+        return carry, ys
+    qs = jnp.arange(ch.local_chunks, dtype=jnp.int32)
+    unroll = ch.local_chunks if unroll_chunks else 1
+    return jax.lax.scan(one_chunk, carry0, qs, unroll=unroll)
+
+
+def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
+    plan, program, mesh = dp.plan, dp.program, dp.mesh
+    axis = plan.axis
+    t = plan.loop.trip_count
+
+    repl_keys = [k for k in plan.context.env_keys
+                 if plan.vars[k].in_strategy == "replicate"]
+    env_repl = {k: env[k] for k in repl_keys}
+    env_slab = {}
+    for k in plan.sharded_in_keys:
+        dec = plan.vars[k]
+        if dec.in_strategy == "shard_halo":
+            env_slab[k] = _halo_slabs(env[k], plan, dec.halo)
+        else:
+            env_slab[k] = _pad_reshape(env[k], plan)
+
+    def device_fn(env_repl, env_slab):
+        d = jax.lax.axis_index(axis)
+        slab_stacks = {k: v[:, 0] for k, v in env_slab.items()}
+        carry, ys = _run_local_chunks(plan, program, env_repl, slab_stacks, d,
+                                      dp.unroll_chunks)
+
+        outs: dict[str, Any] = {}
+        for key, dec in plan.vars.items():
+            if dec.out_strategy in ("identity", "partial"):
+                outs[key] = ys[key][:, None]  # (n_loc, 1, c, *rest)
+            elif dec.out_strategy == "scatter":
+                buf, mask = carry[key]
+                outs[key] = (
+                    jax.lax.psum(buf, axis),
+                    jax.lax.psum(mask.astype(jnp.int32), axis),
+                )
+            elif dec.out_strategy == "put":
+                j_star = (t - 1) // plan.chunks.chunk
+                owner = j_star % plan.chunks.num_devices
+                val = jnp.where(d == owner, carry[key],
+                                jnp.zeros_like(carry[key]))
+                outs[key] = jax.lax.psum(val, axis)
+            elif dec.out_strategy == "reduce":
+                rop = red_mod.get_reduction(dec.reduction_op)
+                if rop.collective == "gather":
+                    outs[key] = carry[key][None]
+                else:
+                    outs[key] = red_mod.cross_device_combine(rop, carry[key], axis)
+        return outs
+
+    in_specs = (
+        {k: P() for k in env_repl},
+        {k: P(None, axis) for k in env_slab},
+    )
+    out_specs: dict[str, Any] = {}
+    for key, dec in plan.vars.items():
+        if dec.out_strategy in ("identity", "partial"):
+            out_specs[key] = P(None, axis)
+        elif dec.out_strategy == "scatter":
+            out_specs[key] = (P(), P())
+        elif dec.out_strategy == "put":
+            out_specs[key] = P()
+        elif dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            out_specs[key] = P(axis) if rop.collective == "gather" else P()
+    if not out_specs:
+        return dict(env)
+
+    outs = jax.shard_map(
+        device_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(env_repl, env_slab)
+
+    # --- reassembly at the jit level (layout, not messages) ---------------
+    result = dict(env)
+    for key, dec in plan.vars.items():
+        if dec.out_strategy == "identity":
+            flat = _unpad_flat(outs[key], plan, t)
+            result[key] = flat.astype(env[key].dtype)
+        elif dec.out_strategy == "partial":
+            flat = _unpad_flat(outs[key], plan, t)
+            b = dec.write_map.b
+            result[key] = jax.lax.dynamic_update_slice_in_dim(
+                env[key], flat.astype(env[key].dtype), b, 0)
+        elif dec.out_strategy == "scatter":
+            summed, mask = outs[key]
+            vmask = (mask > 0).reshape((-1,) + (1,) * (summed.ndim - 1))
+            result[key] = jnp.where(vmask, summed.astype(env[key].dtype), env[key])
+        elif dec.out_strategy == "put":
+            result[key] = outs[key]
+        elif dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            val = outs[key]
+            if rop.collective == "gather":
+                val = rop.local_fold(val, 0)
+            if key in env:
+                val = rop.pairwise(env[key], val)
+            result[key] = val
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Master/worker lowering (paper-faithful baseline)
+# ---------------------------------------------------------------------------
+
+
+def _mw_send(x, src, dst, d, current, axis):
+    """Point-to-point send emulation: ``dst`` receives ``x`` from ``src``."""
+    msg = jax.lax.ppermute(x, axis, perm=[(src, dst)])
+    return jnp.where(d == dst, msg, current)
+
+
+def _execute_master_worker(dp: DistributedProgram, env: dict) -> dict:
+    plan, program, mesh = dp.plan, dp.program, dp.mesh
+    axis = plan.axis
+    p_total = mesh.shape[axis]
+    ch = plan.chunks
+    w = ch.num_devices            # compute ranks (P-1 when master excluded)
+    t = plan.loop.trip_count
+    first_worker = p_total - w    # 1 when master excluded, else 0
+
+    def device_fn(env_all):
+        d = jax.lax.axis_index(axis)
+        wd = jnp.clip(d - first_worker, 0, w - 1)
+
+        # --- master -> worker sends of every IN buffer --------------------
+        env_in: dict[str, Any] = {}
+        slab_stacks: dict[str, Any] = {}
+        for key in plan.context.env_keys:
+            dec = plan.vars[key]
+            info = plan.context.vars[key]
+            if dec.in_strategy == "replicate":
+                x = env_all[key]
+                recv = x
+                for dst in range(first_worker, p_total):
+                    if dst == 0:
+                        continue
+                    recv = _mw_send(x, 0, dst, d, recv, axis)
+                env_in[key] = recv
+            elif dec.in_strategy == "shard":
+                x_pad = env_all[key]  # already (n_loc, W, c, *rest)
+                my = jnp.take(x_pad, wd, axis=1)
+                for dst_w in range(w):
+                    dst = dst_w + first_worker
+                    if dst == 0:
+                        continue
+                    slab = x_pad[:, dst_w]
+                    my = _mw_send(slab, 0, dst, d, my, axis)
+                slab_stacks[key] = my
+            else:
+                env_in[key] = jnp.zeros(info.shape, info.dtype)
+
+        carry, ys = _run_local_chunks(plan, program, env_in, slab_stacks, wd,
+                                      dp.unroll_chunks)
+
+        outs: dict[str, Any] = {}
+        for key, dec in plan.vars.items():
+            info = plan.context.vars[key]
+            if dec.out_strategy in ("identity", "partial"):
+                # workers -> master sends of each slab stack, master
+                # assembles the padded buffer, then re-broadcasts it.
+                full = jnp.zeros((ch.padded_trip,) + info.shape[1:], info.dtype)
+                for src_w in range(w):
+                    src = src_w + first_worker
+                    stack = ys[key]  # (n_loc, c, *rest)
+                    if src != 0:
+                        got = jax.lax.ppermute(stack, axis, perm=[(src, 0)])
+                    else:
+                        got = stack
+                    rows = np.concatenate([
+                        np.arange(ch.chunk) + (q * w + src_w) * ch.chunk
+                        for q in range(ch.local_chunks)
+                    ])
+                    flat = got.reshape((-1,) + info.shape[1:])
+                    placed = full.at[rows].set(flat)
+                    full = jnp.where(d == 0, placed, full)
+                for dst in range(first_worker, p_total):
+                    if dst == 0:
+                        continue
+                    full = _mw_send(full, 0, dst, d, full, axis)
+                outs[key] = full[None]
+            elif dec.out_strategy == "scatter":
+                buf, mask = carry[key]
+                if first_worker == 1:
+                    # The excluded master duplicated worker 0's chunks
+                    # (clamped wd); drop its contribution before combining.
+                    is_worker = (d >= 1).astype(buf.dtype)
+                    buf = buf * is_worker.reshape((1,) * buf.ndim)
+                    mask = jnp.logical_and(mask, d >= 1)
+                outs[key] = (
+                    jax.lax.psum(buf, axis),
+                    jax.lax.psum(mask.astype(jnp.int32), axis),
+                )
+            elif dec.out_strategy == "put":
+                j_star = (t - 1) // ch.chunk
+                owner = j_star % w + first_worker
+                val = carry[key]
+                if owner != 0:
+                    val = _mw_send(val, owner, 0, d, val, axis)
+                for dst in range(first_worker, p_total):
+                    if dst == 0:
+                        continue
+                    val = _mw_send(val, 0, dst, d, val, axis)
+                outs[key] = val[None]
+            elif dec.out_strategy == "reduce":
+                # Table 3: workers send partials; the master folds them in
+                # rank order into the identity-initialised accumulator.
+                rop = red_mod.get_reduction(dec.reduction_op)
+                acc = red_mod.identity_like(rop, carry[key])
+                for src_w in range(w):
+                    src = src_w + first_worker
+                    if src == 0:  # master computed its own chunks
+                        acc = jnp.where(d == 0, rop.pairwise(acc, carry[key]), acc)
+                        continue
+                    got = jax.lax.ppermute(carry[key], axis, perm=[(src, 0)])
+                    acc = jnp.where(d == 0, rop.pairwise(acc, got), acc)
+                for dst in range(first_worker, p_total):
+                    if dst == 0:
+                        continue
+                    acc = _mw_send(acc, 0, dst, d, acc, axis)
+                outs[key] = acc[None]
+        return outs
+
+    env_all = {}
+    for key in plan.context.env_keys:
+        dec = plan.vars[key]
+        if dec.in_strategy == "shard":
+            env_all[key] = _pad_reshape(env[key], plan)
+        else:
+            env_all[key] = env[key]
+    in_specs = {k: P() for k in env_all}
+    out_specs: dict[str, Any] = {}
+    for key, dec in plan.vars.items():
+        if dec.out_strategy in ("identity", "partial", "put", "reduce"):
+            out_specs[key] = P(axis)
+        elif dec.out_strategy == "scatter":
+            out_specs[key] = (P(), P())
+    if not out_specs:
+        return dict(env)
+
+    outs = jax.shard_map(
+        device_fn, mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
+        check_vma=False,
+    )(env_all)
+
+    result = dict(env)
+    for key, dec in plan.vars.items():
+        if dec.out_strategy == "identity":
+            result[key] = outs[key][0][:t]
+        elif dec.out_strategy == "partial":
+            flat = outs[key][0][:t]
+            result[key] = jax.lax.dynamic_update_slice_in_dim(
+                env[key], flat.astype(env[key].dtype), dec.write_map.b, 0)
+        elif dec.out_strategy == "scatter":
+            summed, mask = outs[key]
+            vmask = (mask > 0).reshape((-1,) + (1,) * (summed.ndim - 1))
+            result[key] = jnp.where(vmask, summed.astype(env[key].dtype), env[key])
+        elif dec.out_strategy == "put":
+            result[key] = outs[key][0]
+        elif dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            val = outs[key][0]
+            if key in env:
+                val = rop.pairwise(env[key], val)
+            result[key] = val
+    return result

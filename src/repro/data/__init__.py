@@ -1,0 +1,16 @@
+"""Deterministic synthetic data pipeline (the training substrate).
+
+No external corpora are available offline, so the pipeline synthesises a
+*learnable* token stream — a mixture of a Zipfian unigram floor and a
+seeded first-order Markov chain — deterministically from (seed, step,
+shard), which gives:
+
+* reproducibility across restarts (fault tolerance needs bit-identical
+  batches after resume),
+* per-host sharding without communication (each host computes only its
+  shard's slice, the paper's "sequential remainder on master" stays on
+  the host),
+* a non-trivial learning signal (loss drops well below the unigram
+  entropy only if the model learns the transition structure).
+"""
+from repro.data.pipeline import SyntheticLM, make_batch_iterator  # noqa: F401

@@ -1,0 +1,114 @@
+"""Synthetic LM data: seeded Zipf + Markov mixture, shard-deterministic."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Deterministic synthetic token distribution.
+
+    A first-order Markov chain over a reduced state space (``n_states``)
+    lifted to the full vocab; transition structure is fixed by ``seed``.
+    """
+
+    vocab_size: int
+    seed: int = 0
+    n_states: int = 64
+    markov_weight: float = 0.7
+
+    def __post_init__(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        s = self.n_states
+        # sparse-ish row-stochastic transition matrix
+        logits = rng.normal(size=(s, s)) * 2.0
+        keep = rng.random((s, s)) < 0.25
+        logits = np.where(keep, logits, -1e9)
+        logits[:, 0] = 0.0  # ensure rows are connected
+        self._trans = jnp.asarray(
+            jax.nn.softmax(jnp.asarray(logits, jnp.float32), axis=-1))
+        # Zipfian unigram over the full vocab
+        ranks = np.arange(1, self.vocab_size + 1)
+        z = 1.0 / ranks ** 1.1
+        self._unigram = jnp.asarray(z / z.sum(), jnp.float32)
+        # state -> vocab band mapping
+        self._band = self.vocab_size // s
+
+    def sample(self, key, batch: int, seq_len: int) -> jax.Array:
+        """(batch, seq_len) int32 tokens."""
+        k1, k2, k3 = jax.random.split(key, 3)
+        s0 = jax.random.randint(k1, (batch,), 0, self.n_states)
+
+        def step(state, k):
+            nxt = jax.random.categorical(
+                k, jnp.log(self._trans[state] + 1e-9))
+            return nxt, nxt
+
+        keys = jax.random.split(k2, seq_len)
+        _, states = jax.lax.scan(step, s0, keys)         # (S, B)
+        states = states.T                                # (B, S)
+        # lift: mostly a deterministic token inside the state's band,
+        # mixed with Zipf noise
+        offs = jax.random.randint(k3, (batch, seq_len), 0,
+                                  max(1, self._band))
+        markov_tok = states * self._band + offs % max(1, self._band)
+        zipf_tok = jax.random.categorical(
+            k3, jnp.log(self._unigram + 1e-12),
+            shape=(batch, seq_len))
+        pick = jax.random.uniform(k1, (batch, seq_len)) < self.markov_weight
+        return jnp.where(pick, markov_tok, zipf_tok).astype(jnp.int32) \
+            % self.vocab_size
+
+
+def batch_key(seed: int, step: int, shard: int) -> jax.Array:
+    key = jax.random.PRNGKey(seed)
+    key = jax.random.fold_in(key, step)
+    return jax.random.fold_in(key, shard)
+
+
+def make_batch_iterator(
+    *,
+    vocab_size: int,
+    batch: int,
+    seq_len: int,
+    seed: int = 0,
+    shard: int = 0,
+    num_shards: int = 1,
+    start_step: int = 0,
+    embed_dim: int | None = None,
+    frames: int | None = None,
+) -> Iterator[dict]:
+    """Yields batches for this host shard, deterministically per step.
+
+    ``embed_dim`` switches to precomputed-embedding batches (VLM stub);
+    ``frames`` adds encoder frames (whisper stub).
+    """
+    assert batch % num_shards == 0, (batch, num_shards)
+    local = batch // num_shards
+    dist = SyntheticLM(vocab_size, seed=seed)
+    step = start_step
+    while True:
+        key = batch_key(seed, step, shard)
+        tokens = dist.sample(key, local, seq_len)
+        out = {"labels": tokens}
+        if embed_dim is not None:
+            ek = jax.random.fold_in(key, 1)
+            out["embeds"] = jax.random.normal(
+                ek, (local, seq_len, embed_dim), jnp.float32) * 0.1
+        else:
+            out["tokens"] = tokens
+        if frames is not None and embed_dim is None:
+            raise ValueError("frames requires embed_dim for the stub")
+        if frames is not None:
+            fk = jax.random.fold_in(key, 2)
+            out["frames"] = jax.random.normal(
+                fk, (local, frames, embed_dim), jnp.float32) * 0.1
+            out["tokens"] = tokens
+            del out["embeds"]
+        yield out
+        step += 1

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the two compute hot-spots of the model stack:
+
+* ``flash_attention`` — blocked online-softmax attention (GQA, causal,
+  sliding-window), VMEM-tiled for the MXU;
+* ``ssd_scan``       — Mamba-2 SSD chunked scan (intra-chunk dense work
+  + sequential chunk-state recurrence in VMEM scratch).
+
+``ops.py`` exposes jit-ready wrappers (interpret-mode on CPU, compiled on
+TPU); ``ref.py`` holds the pure-jnp oracles the test-suite sweeps
+against.
+"""

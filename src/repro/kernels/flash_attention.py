@@ -1,0 +1,147 @@
+"""Blocked online-softmax attention (FlashAttention recurrence) in Pallas.
+
+TPU-native layout (DESIGN.md hardware-adaptation note): instead of the
+CUDA warp-level softmax of the GPU kernels, the recurrence is expressed
+as MXU-shaped (block_q x block_k) matmuls over VMEM tiles; the running
+max / denominator / accumulator live in VMEM scratch and persist across
+the (sequential) innermost grid dimension, which walks KV blocks.
+
+Grid: (B, H, n_q_blocks, n_kv_blocks) — the last dim is sequential on
+TPU, so the scratch carries the online-softmax state for one (b, h, qi)
+triple while ki sweeps.  GQA is expressed in the BlockSpec index maps
+(`h // group` selects the KV head), so no KV replication is materialised.
+
+Supports: causal (suffix-aligned when Sq != Sk), sliding window, bf16 or
+f32 inputs with f32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  causal: bool, window, block_q: int, block_k: int,
+                  sq: int, sk: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # positions of this tile (suffix alignment: query row r is position
+    # r + sk - sq in key space)
+    off = sk - sq
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + off
+    k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    # tile interaction test (lets XLA skip dead tiles cheaply)
+    q_lo = qi * block_q + off
+    q_hi = q_lo + block_q - 1
+    k_lo = ki * block_k
+    needed = True
+    if causal:
+        needed = jnp.asarray(k_lo <= q_hi)
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, jnp.asarray(k_lo + block_k - 1 > q_lo - window))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bq, bk)
+        allowed = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            allowed = jnp.logical_and(
+                allowed, k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            allowed = jnp.logical_and(
+                allowed, k_pos[None, :] > q_pos[:, None] - window)
+        # mask padded keys
+        allowed = jnp.logical_and(allowed, (k_pos < sk)[None, :])
+        s = jnp.where(allowed, s, NEG_INF)
+
+        m_prev = m_sc[...]                               # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(allowed, p, 0.0)
+        corr = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                         jnp.exp(m_prev - m_safe))
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bq, d)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + pv
+        m_sc[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=None,
+                           block_q=128, block_k=128, interpret=False):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd).
+
+    Pads Sq/Sk up to block multiples internally; hd should be a multiple
+    of 128 on real TPUs (any value works in interpret mode).
+    """
+    b, h, sq, hd = q.shape
+    _, kv, sk, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = 1.0 / (hd ** 0.5)
+
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(sk, 8))
+    nq = -(-sq // block_q)
+    nk = -(-sk // block_k)
+    sq_p, sk_p = nq * block_q, nk * block_k
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, sq=sq, sk=sk, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bb, hh, qi, ki, g=group: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bb, hh, qi, ki, g=group: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq]

@@ -1,0 +1,51 @@
+"""Jit-ready wrappers over the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel
+body runs as traced jnp ops — correctness-identical); on a TPU backend
+they compile through Mosaic.  The wrappers adapt the model stack's
+(B, S, H, hd) layout to the kernels' (B, H, S, hd) MXU-friendly layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, kind="causal", window=None,
+                    q_positions=None, k_positions=None,
+                    block_q=128, block_k=128):
+    """Drop-in for repro.models.layers.attention(impl="pallas").
+
+    q: (B, S, H, hd); k, v: (B, Sk, KV, hd) — model-stack layout.
+    Positions must be the default contiguous layout (the kernel derives
+    them; explicit position arrays fall back to suffix alignment).
+    """
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=(kind == "causal"), window=window,
+        block_q=block_q, block_k=block_k, interpret=_use_interpret())
+    return out.swapaxes(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk=128):
+    """Drop-in SSD scan: adds the D*x skip the kernel omits.
+
+    x: (B,S,H,P); dt post-softplus; A negative; Bm/Cm (B,S,N); D (H,).
+    """
+    y = ssd_scan_kernel(x, dt, A, Bm, Cm, chunk=chunk,
+                        interpret=_use_interpret())
+    return y + x * D[:, None].astype(x.dtype)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are *independent* implementations (naive recurrences / materialised
+scores), deliberately structured differently from both the kernels and
+the model-stack fast paths, so agreement is meaningful.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Materialised-scores attention.
+
+    q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd). GQA via H = KV * G.
+    Query position i attends to key j iff (not causal or j <= i + off)
+    and (window is None or j > i + off - window), with off = Sk - Sq
+    (suffix alignment, matching the kernel).
+    """
+    b, h, sq, hd = q.shape
+    _, kv, sk, _ = k.shape
+    g = h // kv
+    off = sk - sq
+    qg = q.reshape(b, kv, g, sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(hd)
+    qi = jnp.arange(sq)[:, None] + off
+    kj = jnp.arange(sk)[None, :]
+    allowed = jnp.ones((sq, sk), bool)
+    if causal:
+        allowed &= kj <= qi
+    if window is not None:
+        allowed &= kj > qi - window
+    s = jnp.where(allowed, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, D):
+    """Naive per-token SSD recurrence (the definitionally-correct oracle).
+
+    x: (b, s, h, p); dt: (b, s, h) post-softplus; A: (h,) negative;
+    B, C: (b, s, n); D: (h,).  Returns (y (b,s,h,p), h_final (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+
+    def step(hprev, inp):
+        xt, dtt, Bt, Ct = inp                       # (b,h,p),(b,h),(b,n),(b,n)
+        decay = jnp.exp(dtt * A)                    # (b,h)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        hnew = hprev * decay[..., None, None] + upd
+        yt = jnp.einsum("bn,bhpn->bhp", Ct, hnew)
+        return hnew, yt
+
+    h0 = jnp.zeros((b, h, p, n), f32)
+    hf, ys = jax.lax.scan(
+        step, h0,
+        (x.swapaxes(0, 1).astype(f32), dt.swapaxes(0, 1).astype(f32),
+         B.swapaxes(0, 1).astype(f32), C.swapaxes(0, 1).astype(f32)))
+    y = ys.swapaxes(0, 1) + x.astype(f32) * D[:, None]
+    return y.astype(x.dtype), hf

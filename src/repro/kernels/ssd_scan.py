@@ -1,0 +1,103 @@
+"""Mamba-2 SSD chunked scan in Pallas.
+
+TPU-native decomposition (DESIGN.md): the chunk dimension is the
+*sequential* innermost grid axis — the (p x n) chunk state lives in VMEM
+scratch and is carried across chunk steps, while the intra-chunk work is
+dense (Q x Q) MXU matmuls, exactly the state-space-duality split.  One
+grid step handles one (batch, head, chunk) triple.
+
+Inputs are pre-chunked by the wrapper: x (B, C, Q, H, P), dt (B, C, Q, H)
+(post-softplus), A (H,), Bm/Cm (B, C, Q, N).  Output y excludes the D*x
+skip (added by the wrapper; keeps the kernel state-only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_sc, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_sc[...] = jnp.zeros_like(h_sc)
+
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)          # (Q,)
+    a_h = a_ref[0].astype(jnp.float32)                   # scalar
+    bm = b_ref[0, 0].astype(jnp.float32)                 # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)                 # (Q, N)
+
+    da = dt * a_h                                        # (Q,) <= 0
+    acum = jnp.cumsum(da)                                # (Q,)
+    # intra-chunk: scores(i,j) = (C_i . B_j) * exp(a_i - a_j) * dt_j, i>=j
+    seg = acum[:, None] - acum[None, :]
+    iq = jax.lax.iota(jnp.int32, chunk)
+    causal = iq[:, None] >= iq[None, :]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    scores = cb * decay * dt[None, :]
+    y_intra = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += exp(a_i) * C_i . h_prev
+    h_prev = h_sc[...]                                   # (N, P)
+    y_inter = jax.lax.dot_general(cm, h_prev, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y = y_intra + y_inter * jnp.exp(acum)[:, None]
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: h = h * exp(a_last) + sum_j exp(a_last - a_j) dt_j B_j x_j^T
+    w = jnp.exp(acum[-1] - acum) * dt                    # (Q,)
+    hb = jax.lax.dot_general(bm * w[:, None], x,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    h_sc[...] = h_prev * jnp.exp(acum[-1]) + hb
+
+
+def ssd_scan_kernel(x, dt, A, Bm, Cm, *, chunk=128, interpret=False):
+    """x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,N).
+
+    Returns y (B,S,H,P) (without the D*x skip)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = Bm.reshape(b, nc, q, n)
+    cc = Cm.reshape(b, nc, q, n)
+
+    kernel = functools.partial(_ssd_kernel, chunk=q)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p),
+                         lambda bb, hh, ci: (bb, ci, 0, hh, 0)),
+            pl.BlockSpec((1, 1, q, 1),
+                         lambda bb, hh, ci: (bb, ci, 0, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, ci: (hh,)),
+            pl.BlockSpec((1, 1, q, n), lambda bb, hh, ci: (bb, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bb, hh, ci: (bb, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, 1, p),
+                               lambda bb, hh, ci: (bb, ci, 0, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nc, q, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, A, bc, cc)
+    return y.reshape(b, nc * q, h, p)[:, :s]

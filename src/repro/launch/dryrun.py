@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.
+
+For every cell this script:
+
+1. builds the step (train_step / prefill / decode) with plan-derived
+   shardings (launch/steps.py),
+2. ``jit(...).lower(**input ShapeDtypeStructs).compile()`` — no arrays
+   are ever allocated,
+3. records ``memory_analysis()`` (proves the cell fits 16 GB/chip),
+   ``cost_analysis()`` (FLOPs/bytes, scan body counted once),
+   and the scan-corrected HLO collective/dot statistics
+   (launch/hlo_analysis.py),
+4. writes one JSON per cell to --out (existing cells are skipped, so the
+   sweep is resumable).
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-7b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def cell_id(arch: str, shape: str, mesh_name: str) -> str:
+    return f"{arch}__{shape}__{mesh_name}"
+
+
+def should_skip(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("long_500k skipped: pure full attention "
+                "(DESIGN.md §4)")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             *, force: bool = False) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch import hlo_analysis as ha
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell, make_cell
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cid = cell_id(arch, shape_name, mesh_name)
+    path = os.path.join(out_dir, cid + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record: dict = {
+        "cell": cid, "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "kind": shape.kind,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    skip = should_skip(cfg, shape)
+    if skip:
+        record["status"] = "skipped"
+        record["reason"] = skip
+        _write(path, record)
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.size
+        cell = make_cell(cfg, shape, mesh)
+        lowered = lower_cell(cell)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        trip_default = max(1, cfg.n_layers)
+        rep = ha.analyze_hlo(hlo, num_devices=n_dev,
+                             default_trip=trip_default)
+
+        record.update({
+            "status": "ok",
+            "devices": n_dev,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_per_device_gb": round(
+                    (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes
+                     - ma.alias_size_in_bytes) / 2**30, 3),
+                # minus the CPU-only f32 weight-convert buffers (the TPU
+                # build keeps bf16 MXU dots): the deployable HBM estimate
+                "peak_tpu_adjusted_gb": None,  # filled below
+            },
+            "cost_analysis": {
+                "flops_scan_once": ca.get("flops", 0.0),
+                "bytes_scan_once": ca.get("bytes accessed", 0.0),
+            },
+            "hlo": {
+                "dot_flops": rep.dot_flops,
+                "dot_bytes": rep.dot_bytes,
+                "wire_bytes": rep.total_wire_bytes,
+                "collective_bytes_by_kind": rep.by_kind(),
+                "n_collectives": len(rep.collectives),
+                "trip_counts": rep.trip_counts,
+                "f32_param_convert_bytes": rep.f32_param_convert_bytes,
+            },
+        })
+        record["memory"]["peak_tpu_adjusted_gb"] = round(
+            record["memory"]["peak_per_device_gb"]
+            - rep.f32_param_convert_bytes / 2**30, 3)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    _write(path, record)
+    return record
+
+
+def _write(path: str, record: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, list_archs
+
+    archs = args.arch or (list_archs() if args.all else [])
+    shapes = args.shape or list(SHAPES)
+    if not archs:
+        ap.error("pass --arch <id> (repeatable) or --all")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_cell(arch, shape, multi, args.out,
+                               force=args.force)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (f" mem={rec['memory']['peak_per_device_gb']}GB"
+                             f" compile={rec['compile_s']}s"
+                             f" wire={rec['hlo']['wire_bytes']/2**30:.3f}GB")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{status:>7s}] {rec['cell']}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,316 @@
+"""Step builders: train_step / prefill_step / decode_step with shardings.
+
+Every (arch x shape x mesh) dry-run cell lowers one of these.  The
+shardings come from the tensor planner (repro.core.tensor_plan) — i.e.
+from the paper's IN/OUT/INOUT derivation generalised to tensors — and
+are attached as jax.ShapeDtypeStruct shardings for AOT lowering
+(``input_specs``) or as in_shardings for live execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig, TrainConfig
+from repro.core import tensor_plan as tp
+from repro.models import build_model
+from repro.optim import clip_by_global_norm, cosine_warmup, make_optimizer
+from repro.optim.api import opt_state_axes
+from repro.optim.schedule import cosine_warmup as _cos
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one dry-run cell."""
+
+    model_cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    plan: tp.TensorPlan
+    step_fn: Any                   # the jittable python callable
+    args: tuple                    # ShapeDtypeStructs with shardings
+    donate: tuple = ()
+    kind: str = "train"
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree, axes_tree, plan, mesh):
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree_util.tree_map(
+        lambda s, a: _sds(s.shape, s.dtype, mesh, plan.spec(s.shape, a)),
+        shapes_tree, axes_tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def _dp_degree(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _batch_fields(cfg: ModelConfig, shape: ShapeConfig):
+    """(field -> (shape, dtype)) for a training batch of this arch."""
+    b, s = shape.global_batch, shape.seq_len
+    fields = {"labels": ((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        fields["frames"] = ((b, cfg.encoder.n_frames, cfg.d_model),
+                            jnp.float32)
+        fields["tokens"] = ((b, s), jnp.int32)
+    elif cfg.embedding_stub:
+        fields["embeds"] = ((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        fields["tokens"] = ((b, s), jnp.int32)
+    return fields
+
+
+_BATCH_AXES = {
+    "labels": (tp.BATCH, None),
+    "tokens": (tp.BATCH, None),
+    "frames": (tp.BATCH, None, None),
+    "embeds": (tp.BATCH, None, None),
+}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def choose_microbatch(cfg: ModelConfig, shape: ShapeConfig,
+                      dp: int, *, budget_gb: float = 3.0) -> int:
+    """Split the per-device batch so rematerialised activations fit.
+
+    Rough per-microbatch activation estimate: one (B_loc, S, d_model)
+    residual per layer in bf16, x4 for block intermediates kept live
+    during the rematerialised backward."""
+    b_loc = max(1, shape.global_batch // dp)
+    per_seq = shape.seq_len * cfg.d_model * 2 * 4 * cfg.n_layers
+    micro = 1
+    while (b_loc // micro > 1
+           and b_loc % (micro * 2) == 0
+           and b_loc // micro * per_seq > budget_gb * 2**30):
+        micro *= 2
+    return micro
+
+
+def make_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    train_cfg: TrainConfig, *, attn_impl="auto") -> CellSpec:
+    model = build_model(cfg)
+    plan = tp.make_train_plan(mesh.axis_names, tuple(mesh.shape.values()),
+                              zero3=train_cfg.zero3,
+                              strategy=train_cfg.strategy, mesh=mesh)
+    opt = make_optimizer(train_cfg.optimizer,
+                         weight_decay=train_cfg.weight_decay)
+    groups = _dp_degree(mesh)
+    compute_dtype = jnp.bfloat16 if train_cfg.compute_dtype == "bfloat16" \
+        else jnp.float32
+    n_micro = train_cfg.microbatch or choose_microbatch(
+        cfg, shape, _dp_degree(mesh))
+
+    act_axes = ((tp.BATCH, tp.SEQ, None) if train_cfg.seq_parallel
+                else (tp.BATCH, None, None))
+    if train_cfg.seq_parallel:
+        plan = dataclasses.replace(
+            plan, rules={**plan.rules, tp.SEQ: ("model",)})
+
+    def shard_act(x):
+        return plan.constrain(x, act_axes)
+
+    def loss_of(params, batch):
+        return model.loss_fn(params, batch, impl=attn_impl, groups=groups,
+                             remat=train_cfg.remat,
+                             compute_dtype=compute_dtype,
+                             shard_fn=shard_act)
+
+    def train_step(params, opt_state, batch, step):
+        if n_micro > 1:
+            # gradient accumulation: the microbatch scan lives INSIDE the
+            # differentiated function so the parameter cotangent is a
+            # single in-place loop carry (an explicit `g_acc + g` outside
+            # grad keeps two full gradient trees live — measured +7.3 GB
+            # on arctic-480b, EXPERIMENTS.md §Dry-run).
+            # strided split (B -> (B/n, n) -> (n, B/n)) so each device's
+            # local rows split evenly across microbatches: no resharding
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((x.shape[0] // n_micro, n_micro)
+                                    + x.shape[1:]).swapaxes(0, 1),
+                batch)
+
+            def micro_loss(params, micro):
+                def body(carry, mb):
+                    l, m = loss_of(params, mb)
+                    return (carry[0] + l, carry[1] + m["aux"]), None
+
+                (tot, aux), _ = jax.lax.scan(
+                    jax.checkpoint(body),
+                    (jnp.float32(0), jnp.float32(0)), micro)
+                return tot / n_micro, {"ce": tot / n_micro,
+                                       "aux": aux / n_micro}
+
+            (loss, metrics), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, micro)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip)
+        lr = _cos(step, base_lr=train_cfg.learning_rate,
+                  warmup_steps=train_cfg.warmup_steps,
+                  total_steps=train_cfg.total_steps)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    # abstract shapes + shardings
+    p_shapes, p_axes = _param_shapes(model)
+    if train_cfg.param_dtype == "bfloat16":
+        # bf16 resident params (drivers cast after init; see train.py)
+        p_shapes = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+            p_shapes)
+    params_sds = _tree_sds(p_shapes, p_axes, plan, mesh)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    o_axes = opt_state_axes(train_cfg.optimizer, p_shapes, p_axes)
+    opt_sds = _tree_sds(o_shapes, o_axes, plan, mesh)
+    batch_sds = {
+        k: _sds(sh, dt, mesh, plan.spec(sh, _BATCH_AXES[k]))
+        for k, (sh, dt) in _batch_fields(cfg, shape).items()
+    }
+    step_sds = _sds((), jnp.int32, mesh, P())
+    return CellSpec(cfg, shape, mesh, plan, train_step,
+                    (params_sds, opt_sds, batch_sds, step_sds),
+                    donate=(0, 1), kind="train")
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def _serve_plan(mesh, shape):
+    shard_seq = shape.global_batch < _dp_degree(mesh)
+    return tp.make_serve_plan(mesh.axis_names, tuple(mesh.shape.values()),
+                              shard_seq=shard_seq, decode=shape.is_decode,
+                              mesh=mesh)
+
+
+def make_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      *, attn_impl="auto") -> CellSpec:
+    model = build_model(cfg)
+    plan = _serve_plan(mesh, shape)
+    b, s = shape.global_batch, shape.seq_len
+
+    def shard_act(x):
+        return plan.constrain(x, (tp.BATCH, None, None))
+
+    groups = 1 if shape.global_batch < _dp_degree(mesh) \
+        else _dp_degree(mesh)
+
+    def prefill_step(params, batch, caches):
+        return model.prefill(params, batch, caches, impl=attn_impl,
+                             compute_dtype=jnp.bfloat16, groups=groups,
+                             shard_fn=shard_act)
+
+    p_shapes, p_axes = _param_shapes(model)
+    p_shapes = _cast_tree(p_shapes, jnp.bfloat16)  # inference: bf16 params
+    params_sds = _tree_sds(p_shapes, p_axes, plan, mesh)
+    fields = _batch_fields(cfg, shape)
+    fields.pop("labels")
+    batch_sds = {
+        k: _sds(sh, dt, mesh, plan.spec(sh, _BATCH_AXES[k]))
+        for k, (sh, dt) in fields.items()
+    }
+    c_shapes, c_axes = _cache_shapes(model, b, s)
+    cache_sds = _tree_sds(c_shapes, c_axes, plan, mesh)
+    return CellSpec(cfg, shape, mesh, plan, prefill_step,
+                    (params_sds, batch_sds, cache_sds),
+                    donate=(2,), kind="prefill")
+
+
+def _cache_shapes(model, batch, cache_len):
+    shapes = jax.eval_shape(
+        functools.partial(model.init_cache, batch, cache_len,
+                          dtype=jnp.bfloat16))
+    return shapes, model.cache_axes()
+
+
+def _cast_tree(shapes_tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), shapes_tree)
+
+
+def _param_shapes(model):
+    """(ShapeDtypeStruct tree, axes tree) without allocating params.
+
+    The axes tree is static python (strings), so it is captured from the
+    traced call rather than returned through eval_shape."""
+    captured = {}
+
+    def init_params_only(key):
+        params, axes = model.init(key)
+        captured["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(init_params_only, jax.random.PRNGKey(0))
+    return shapes, captured["axes"]
+
+
+def make_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     *, attn_impl="auto") -> CellSpec:
+    model = build_model(cfg)
+    plan = _serve_plan(mesh, shape)
+    b, s = shape.global_batch, shape.seq_len
+
+    def shard_act(x):
+        return plan.constrain(x, (tp.BATCH, None, None))
+
+    groups = 1 if shape.global_batch < _dp_degree(mesh) \
+        else _dp_degree(mesh)
+
+    def decode_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos,
+                                 impl=attn_impl, groups=groups,
+                                 compute_dtype=jnp.bfloat16,
+                                 shard_fn=shard_act)
+
+    p_shapes, p_axes = _param_shapes(model)
+    p_shapes = _cast_tree(p_shapes, jnp.bfloat16)  # inference: bf16 params
+    params_sds = _tree_sds(p_shapes, p_axes, plan, mesh)
+    c_shapes, c_axes = _cache_shapes(model, b, s)
+    cache_sds = _tree_sds(c_shapes, c_axes, plan, mesh)
+    tok_sds = _sds((b,), jnp.int32, mesh,
+                   plan.spec((b,), (tp.BATCH,)))
+    pos_sds = _sds((b,), jnp.int32, mesh,
+                   plan.spec((b,), (tp.BATCH,)))
+    return CellSpec(cfg, shape, mesh, plan, decode_step,
+                    (params_sds, cache_sds, tok_sds, pos_sds),
+                    donate=(1,), kind="decode")
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              train_cfg: TrainConfig | None = None, **kw) -> CellSpec:
+    if shape.kind == "train":
+        from repro.configs import recommended_train_config
+
+        return make_train_cell(cfg, shape, mesh,
+                               train_cfg or recommended_train_config(cfg),
+                               **kw)
+    if shape.kind == "prefill":
+        return make_prefill_cell(cfg, shape, mesh, **kw)
+    return make_decode_cell(cfg, shape, mesh, **kw)
+
+
+def lower_cell(cell: CellSpec):
+    """AOT-lower the cell (no device memory touched)."""
+    jitted = jax.jit(cell.step_fn, donate_argnums=cell.donate)
+    return jitted.lower(*cell.args)

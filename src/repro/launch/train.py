@@ -1,0 +1,146 @@
+"""End-to-end training driver.
+
+Wires together every substrate: config registry, synthetic data pipeline,
+plan-derived shardings, microbatched train step, fault-tolerant loop with
+async checkpointing and straggler monitoring.
+
+Examples:
+  # train a ~100M smoke-size model for 300 steps on the local device
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+      --smoke --steps 300
+
+  # multi-host production launch (per host; see launch/scripts/)
+  python -m repro.launch.train --arch qwen1.5-110b --coordinator ...
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+log = logging.getLogger("repro.train")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-size)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--coordinator", default=None,
+                    help="jax.distributed coordinator address (multi-host)")
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=0)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    if args.coordinator:
+        jax.distributed.initialize(args.coordinator, args.num_hosts,
+                                   args.host_id)
+
+    from repro.checkpoint import Checkpointer
+    from repro.configs import (ShapeConfig, get_config,
+                               recommended_train_config, smoke_config)
+    from repro.core import tensor_plan as tp
+    from repro.data import make_batch_iterator
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import make_train_cell
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+    from repro.runtime import FaultTolerantLoop, StragglerMonitor
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    train_cfg = dataclasses.replace(
+        recommended_train_config(cfg),
+        learning_rate=args.lr, total_steps=args.steps,
+        warmup_steps=max(1, args.steps // 20))
+    mesh = make_local_mesh(args.model_parallel)
+    shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
+    cell = make_train_cell(cfg, shape, mesh, train_cfg)
+
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(train_cfg.seed))
+    if train_cfg.param_dtype == "bfloat16":
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16), params)
+    opt = make_optimizer(train_cfg.optimizer)
+    opt_state = opt.init(params)
+
+    step_j = jax.jit(cell.step_fn, donate_argnums=(0, 1))
+    data = make_batch_iterator(
+        vocab_size=cfg.vocab_size, batch=args.batch, seq_len=args.seq_len,
+        seed=train_cfg.seed, shard=args.host_id,
+        num_shards=args.num_hosts,
+        embed_dim=cfg.d_model if cfg.embedding_stub
+        and cfg.family != "encdec" else None,
+        frames=cfg.encoder.n_frames if cfg.family == "encdec" else None,
+    )
+    if cfg.family == "encdec":
+        # frames stub needs embed_dim; rebuild accordingly
+        data = make_batch_iterator(
+            vocab_size=cfg.vocab_size, batch=args.batch,
+            seq_len=args.seq_len, seed=train_cfg.seed,
+            shard=args.host_id, num_shards=args.num_hosts,
+            embed_dim=cfg.d_model, frames=cfg.encoder.n_frames)
+
+    ckpt = Checkpointer(args.ckpt_dir, host_id=args.host_id,
+                        num_hosts=args.num_hosts)
+    monitor = StragglerMonitor()
+    metrics_hist: list[float] = []
+
+    def step_fn(state, step):
+        params, opt_state = state
+        batch = None
+        # deterministic replay: the iterator is keyed by step
+        from repro.data.pipeline import SyntheticLM, batch_key
+
+        batch = next(data)  # iterator advances monotonically; replay via
+        # checkpoint restore handled by recreating the iterator (the
+        # FaultTolerantLoop restores (params, opt), and data is re-keyed)
+        t0 = time.time()
+        params, opt_state, m = step_j(params, opt_state, batch,
+                                      jnp.int32(step))
+        status = monitor.observe(time.time() - t0)
+        if status != "ok":
+            log.warning("straggler status at step %d: %s", step, status)
+        if step % args.log_every == 0:
+            loss = float(m["loss"])
+            metrics_hist.append(loss)
+            log.info("step %5d loss %.4f ce %.4f gnorm %.2f lr %.2e",
+                     step, loss, float(m["ce"]), float(m["grad_norm"]),
+                     float(m["lr"]))
+        return params, opt_state
+
+    loop = FaultTolerantLoop(
+        step_fn=step_fn, checkpointer=ckpt,
+        checkpoint_every=args.ckpt_every)
+    state = (params, opt_state)
+    restored = ckpt.restore_latest(state)
+    start = 0
+    if restored is not None:
+        start, state = restored
+        log.info("resumed from step %d", start)
+    state = loop.run(state, start_step=start,
+                     num_steps=args.steps - start)
+    ckpt.save(args.steps, state)
+    if len(metrics_hist) >= 2:
+        log.info("loss: first %.4f -> last %.4f", metrics_hist[0],
+                 metrics_hist[-1])
+
+
+if __name__ == "__main__":
+    main()

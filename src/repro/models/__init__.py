@@ -1,0 +1,8 @@
+"""Model zoo: layers, SSM (Mamba-2 SSD), MoE, blocks and full LMs.
+
+All modules are plain functions over parameter pytrees; every parameter
+is paired with a tuple of logical axis names consumed by
+:mod:`repro.core.tensor_plan` (the paper's IN/OUT/INOUT derivation,
+generalised to tensors).
+"""
+from repro.models.model import build_model  # noqa: F401

@@ -1,0 +1,282 @@
+"""Transformer / SSD / MoE blocks and the layer-interleave structure.
+
+Heterogeneous stacks (jamba 1:7 attn:mamba, gemma3 5:1 local:global,
+jamba MoE every 2nd layer) are expressed as a repeating *period* of block
+kinds; the model scans over periods (stacked params) and unrolls the
+remainder.  A block kind is the string "<mixer>:<flavour>:<ffn>" —
+e.g. "attn:global:dense", "attn:local:moe", "ssm::none".
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensor_plan as tp
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_rope,
+    attention,
+    init_mlp,
+    make_param,
+    mlp_apply,
+    rms_norm,
+    zeros_param,
+)
+
+
+# ---------------------------------------------------------------------------
+# Period structure
+# ---------------------------------------------------------------------------
+
+
+def kind_of_layer(cfg, idx: int) -> str:
+    mixer = cfg.layer_kind(idx)                 # "attn" | "ssm"
+    flavour = cfg.attn_kind(idx) if mixer == "attn" else ""
+    if cfg.d_ff == 0 and cfg.moe is None:
+        ffn = "none"                            # mamba2: SSD block only
+    else:
+        ffn = cfg.ffn_kind(idx)                 # "dense" | "moe"
+    return f"{mixer}:{flavour}:{ffn}"
+
+
+def period_structure(cfg):
+    """Returns (period_len, slot_kinds, n_periods, tail_kinds)."""
+    p = 1
+    if cfg.attn_layer_period:
+        p = math.lcm(p, cfg.attn_layer_period)
+    if cfg.local_global_period:
+        p = math.lcm(p, cfg.local_global_period)
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.period)
+    p = min(p, cfg.n_layers)
+    n_periods = cfg.n_layers // p
+    tail_start = n_periods * p
+    slot_kinds = [kind_of_layer(cfg, i) for i in range(p)]
+    tail_kinds = [kind_of_layer(cfg, i) for i in range(tail_start,
+                                                       cfg.n_layers)]
+    # kinds must repeat exactly across periods for stacking to be valid
+    for layer in range(tail_start):
+        assert kind_of_layer(cfg, layer) == slot_kinds[layer % p], (
+            cfg.name, layer)
+    return p, slot_kinds, n_periods, tail_kinds
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg, *, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    t = {
+        "norm": zeros_param((d,), (tp.D_MODEL,)),
+        "wq": make_param(ks[0], (d, h, hd), (tp.D_MODEL, tp.HEADS,
+                                             tp.HEAD_DIM)),
+        "wk": make_param(ks[1], (d, kv, hd), (tp.D_MODEL, tp.KV_HEADS,
+                                              tp.HEAD_DIM)),
+        "wv": make_param(ks[2], (d, kv, hd), (tp.D_MODEL, tp.KV_HEADS,
+                                              tp.HEAD_DIM)),
+        "wo": make_param(ks[3], (h, hd, d), (tp.HEADS, tp.HEAD_DIM,
+                                             tp.D_MODEL)),
+    }
+    if cfg.qkv_bias and not cross:
+        t["bq"] = zeros_param((h, hd), (tp.HEADS, tp.HEAD_DIM))
+        t["bk"] = zeros_param((kv, hd), (tp.KV_HEADS, tp.HEAD_DIM))
+        t["bv"] = zeros_param((kv, hd), (tp.KV_HEADS, tp.HEAD_DIM))
+    return t
+
+
+def init_ffn(key, cfg, kind_ffn: str):
+    if kind_ffn == "none":
+        return None
+    t = {"norm": zeros_param((cfg.d_model,), (tp.D_MODEL,))}
+    if kind_ffn == "moe":
+        t.update(moe_mod.init_moe(key, cfg.d_model, cfg.moe))
+    else:
+        t.update(init_mlp(key, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp))
+    return t
+
+
+def init_block(key, cfg, kind: str, *, with_cross: bool = False):
+    mixer, flavour, ffn = kind.split(":")
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    t: dict = {}
+    if mixer == "attn":
+        t["attn"] = init_attn(k1, cfg)
+    else:
+        t["ssm"] = {"norm": zeros_param((cfg.d_model,), (tp.D_MODEL,)),
+                    **ssm_mod.init_ssm_block(k1, cfg.d_model, cfg.ssm)}
+    if with_cross:
+        t["cross"] = init_attn(k4, cfg, cross=True)
+        t["cross"]["norm"] = zeros_param((cfg.d_model,), (tp.D_MODEL,))
+    f = init_ffn(k2, cfg, ffn)
+    if f is not None:
+        t["ffn"] = f
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+INVALID_POS = jnp.iinfo(jnp.int32).max
+
+
+def attn_cache_len(cfg, kind: str, cache_len: int) -> int:
+    _, flavour, _ = kind.split(":")
+    if flavour == "local" and cfg.sliding_window:
+        return min(cfg.sliding_window, cache_len)
+    return cache_len
+
+
+def init_block_cache(cfg, kind: str, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16):
+    mixer, flavour, _ = kind.split(":")
+    if mixer == "ssm":
+        return ssm_mod.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+    length = attn_cache_len(cfg, kind, cache_len)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, kv, hd), dtype),
+        "v": jnp.zeros((batch, length, kv, hd), dtype),
+        "pos": jnp.full((batch, length), INVALID_POS, jnp.int32),
+    }
+
+
+def block_cache_axes(cfg, kind: str):
+    """Logical axes of the cache pytree (for sharding)."""
+    mixer, _, _ = kind.split(":")
+    if mixer == "ssm":
+        return {"h": (tp.BATCH, tp.HEADS, tp.HEAD_DIM, tp.D_STATE),
+                "conv": (tp.BATCH, None, tp.D_INNER)}
+    return {"k": (tp.BATCH, tp.SEQ_KV, tp.KV_HEADS, tp.HEAD_DIM),
+            "v": (tp.BATCH, tp.SEQ_KV, tp.KV_HEADS, tp.HEAD_DIM),
+            "pos": (tp.BATCH, tp.SEQ_KV)}
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, x, cfg, *, rope_positions=None):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    if rope_positions is not None:
+        q = apply_rope(q, rope_positions, cfg.rope_theta)
+        k = apply_rope(k, rope_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg, kind: str, *, positions, cache=None,
+               decode_pos=None, impl="auto", attn_mode="causal"):
+    """Self-attention sub-block. Returns (out, new_cache)."""
+    _, flavour, _ = kind.split(":")
+    window = cfg.sliding_window if flavour == "local" else None
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h, cfg, rope_positions=positions)
+
+    if cache is None:
+        out = attention(q, k, v, kind=attn_mode, window=window,
+                        q_positions=positions, k_positions=positions,
+                        impl=impl)
+        new_cache = None
+    elif decode_pos is None:
+        # prefill: write KV at ring slots (pos % length) so a later
+        # decode step's slot arithmetic stays consistent
+        length = cache["k"].shape[1]
+        s = k.shape[1]
+        take = min(s, length)
+        slots = positions[:, s - take:] % length          # (B, take)
+        bidx = jnp.arange(x.shape[0])[:, None]
+        new_cache = {
+            "k": cache["k"].at[bidx, slots].set(k[:, s - take:].astype(
+                cache["k"].dtype)),
+            "v": cache["v"].at[bidx, slots].set(v[:, s - take:].astype(
+                cache["v"].dtype)),
+            "pos": cache["pos"].at[bidx, slots].set(positions[:, s - take:]),
+        }
+        out = attention(q, k, v, kind="causal", window=window,
+                        q_positions=positions, k_positions=positions,
+                        impl=impl)
+    else:
+        # decode: write this token's KV at its ring slot and attend to all
+        length = cache["k"].shape[1]
+        slot = decode_pos % length                        # (B,)
+        bidx = jnp.arange(x.shape[0])
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(k[:, 0].astype(
+                cache["k"].dtype)),
+            "v": cache["v"].at[bidx, slot].set(v[:, 0].astype(
+                cache["v"].dtype)),
+            "pos": cache["pos"].at[bidx, slot].set(decode_pos),
+        }
+        out = attention(q, new_cache["k"].astype(q.dtype),
+                        new_cache["v"].astype(q.dtype), kind="causal",
+                        window=window, q_positions=positions,
+                        k_positions=new_cache["pos"], impl="full")
+    dtype = x.dtype
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return out, new_cache
+
+
+def cross_attn_apply(p, x, enc_kv, cfg, *, impl="auto"):
+    """Cross-attention against precomputed encoder K/V."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dtype))
+    k, v = enc_kv
+    out = attention(q, k.astype(dtype), v.astype(dtype), kind="bidir",
+                    impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+
+
+def ffn_apply(p, x, cfg, kind: str, *, groups=1):
+    """Returns (out, aux_loss)."""
+    _, _, ffn = kind.split(":")
+    if ffn == "none" or "ffn" not in p:
+        return jnp.zeros_like(x), jnp.float32(0)
+    fp = p["ffn"]
+    h = rms_norm(x, fp["norm"], cfg.norm_eps)
+    if ffn == "moe":
+        y, aux = moe_mod.moe_apply(fp, h, cfg.moe, groups=groups)
+        return y, aux
+    return mlp_apply(fp, h, gated=cfg.gated_mlp), jnp.float32(0)
+
+
+def block_apply(p, x, cfg, kind: str, *, positions, cache=None,
+                decode_pos=None, impl="auto", groups=1, enc_kv=None,
+                attn_mode="causal"):
+    """One full block: mixer + (optional cross) + FFN, residual-wired.
+
+    Returns (x, new_cache, aux_loss)."""
+    mixer, _, ffn = kind.split(":")
+    aux = jnp.float32(0)
+    if mixer == "attn":
+        out, new_cache = attn_apply(p["attn"], x, cfg, kind,
+                                    positions=positions, cache=cache,
+                                    decode_pos=decode_pos, impl=impl,
+                                    attn_mode=attn_mode)
+        x = x + out
+    else:
+        h = rms_norm(x, p["ssm"]["norm"], cfg.norm_eps)
+        sp = {k: v for k, v in p["ssm"].items() if k != "norm"}
+        out, new_cache = ssm_mod.ssm_apply(sp, h, cfg.ssm, cache=cache)
+        x = x + out
+    if enc_kv is not None and "cross" in p:
+        x = x + cross_attn_apply(p["cross"], x, enc_kv, cfg, impl=impl)
+    if ffn != "none":
+        out, aux = ffn_apply(p, x, cfg, kind, groups=groups)
+        x = x + out
+    return x, new_cache, aux

@@ -1,0 +1,327 @@
+"""Shared layers: norms, RoPE, attention (3 execution paths), MLP, loss.
+
+Attention paths:
+
+* ``full``    — materialised scores; smoke tests & small shapes.
+* ``chunked`` — online-softmax over KV blocks (flash-attention recurrence
+  in pure jnp, lax.scan over KV): O(S * block) memory, used by the big
+  prefill/train shapes.  The Pallas kernel in ``repro.kernels`` is the
+  TPU-native version of exactly this recurrence; this is its oracle twin.
+* ``decode``  — single-query attention against a KV cache.
+
+Every function takes/returns plain arrays; parameter trees are built by
+the block constructors in :mod:`repro.models.blocks`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensor_plan as tp
+
+
+# ---------------------------------------------------------------------------
+# Param helpers: params and their logical axes travel together
+# ---------------------------------------------------------------------------
+
+
+def make_param(key, shape, axes, scale=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * scale, tuple(axes)
+
+
+def zeros_param(shape, axes, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), tuple(axes)
+
+
+def split_tree(tree):
+    """{(arr, axes)} pytree -> (params, axes) twin pytrees."""
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and hasattr(x[0], "shape"))
+    params = jax.tree_util.tree_map(lambda x: x[0], tree, is_leaf=is_leaf)
+    axes = jax.tree_util.tree_map(lambda x: x[1], tree, is_leaf=is_leaf)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, N, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_freqs(hd, theta)                        # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rot1, rot2], axis=-1)
+    if hd != 2 * half:  # odd head_dim tail passes through
+        out = jnp.concatenate([out, x[..., 2 * half:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+def _mask_bias(kind, window, q_pos, k_pos):
+    """(..., Sq, Sk) additive bias from positions."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    if kind == "bidir":
+        allowed = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    else:  # causal
+        allowed = dk <= dq
+    if window is not None:
+        allowed = jnp.logical_and(allowed, dk > dq - window)
+    return jnp.where(allowed, 0.0, NEG_INF)
+
+
+def attention_full(q, k, v, *, kind="causal", window=None,
+                   q_positions=None, k_positions=None):
+    """Materialised-scores attention with GQA.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).  positions: (B, S).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(sk), (b, sk))
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd)
+    bias = _mask_bias(kind, window, q_positions, k_positions)  # (B,Sq,Sk)
+    scores = scores + bias[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, kind="causal", window=None,
+                      q_positions=None, k_positions=None, block_kv=1024,
+                      block_q=2048):
+    """Online-softmax (flash recurrence): Q blocks x KV blocks.
+
+    Memory O(block_q * block_kv) score tiles instead of O(Sq * Sk) — both
+    loop dims are blocked (a 56-head unsharded arch at 32k would
+    otherwise materialise 15 GB tiles, EXPERIMENTS.md §Dry-run).  The
+    Pallas kernel in repro.kernels/flash_attention.py is the TPU-native
+    twin of this recurrence.
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(sk), (b, sk))
+    nb = -(-sk // block_kv)
+    pad = nb * block_kv - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, ((0, 0), (0, pad)),
+                              constant_values=jnp.iinfo(jnp.int32).max)
+    nq = -(-sq // block_q)
+    qpad = nq * block_q - sq
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, qpad)),
+                              constant_values=jnp.iinfo(jnp.int32).max - 1)
+
+    kb = k.reshape(b, nb, block_kv, kv, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nb, block_kv, kv, hd).swapaxes(0, 1)
+    pb = k_positions.reshape(b, nb, block_kv).swapaxes(0, 1)
+
+    def one_q_block(args):
+        qblk, qpos = args                                  # (b,bq,h,hd)
+        qg = (qblk.reshape(b, block_q, kv, g, hd).astype(jnp.float32)
+              / jnp.sqrt(hd))
+        m0 = jnp.full((b, kv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, block_q), jnp.float32)
+        acc0 = jnp.zeros((b, block_q, kv, g, hd), jnp.float32)
+
+        def step(carry, blk):
+            m, l, acc = carry
+            kblk, vblk, posb = blk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                           kblk.astype(jnp.float32))
+            bias = _mask_bias(kind, window, qpos, posb)
+            s = s + bias[:, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where((s <= NEG_INF / 2), 0.0, p)
+            corr = jnp.exp(jnp.where(m == NEG_INF, NEG_INF, m - m_safe))
+            corr = jnp.where(m == NEG_INF, 0.0, corr)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bqkgd", p,
+                            vblk.astype(jnp.float32))
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l, acc), None
+
+        # checkpoint: backward recomputes the score tile per block
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step),
+                                      (m0, l0, acc0), (kb, vb, pb))
+        l = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return (acc / l).reshape(b, block_q, h, hd)
+
+    if nq == 1:
+        out = one_q_block((q, q_positions))
+    else:
+        qs = q.reshape(b, nq, block_q, h, hd).swapaxes(0, 1)
+        qp = q_positions.reshape(b, nq, block_q).swapaxes(0, 1)
+        out = jax.lax.map(one_q_block, (qs, qp))           # (nq,b,bq,h,hd)
+        out = out.swapaxes(0, 1).reshape(b, nq * block_q, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, *, window=None,
+                     q_positions=None, k_positions=None):
+    """Single-token decode attention over a (possibly padded) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KV, hd); k_positions: (B, S) with
+    unfilled slots marked by a huge position (masked out).
+    """
+    return attention_full(
+        q, k_cache, v_cache, kind="causal", window=window,
+        q_positions=q_positions, k_positions=k_positions)
+
+
+def attention(q, k, v, *, kind="causal", window=None, q_positions=None,
+              k_positions=None, impl="auto", block_kv=1024):
+    if impl == "auto":
+        # blocked path whenever the full score tile would be large
+        # (cross-attention with long queries counts too)
+        impl = ("chunked" if q.shape[1] * k.shape[1] > 2048 * 2048
+                else "full")
+    if impl == "full":
+        return attention_full(q, k, v, kind=kind, window=window,
+                              q_positions=q_positions,
+                              k_positions=k_positions)
+    if impl == "chunked":
+        return attention_chunked(q, k, v, kind=kind, window=window,
+                                 q_positions=q_positions,
+                                 k_positions=k_positions,
+                                 block_kv=block_kv)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(q, k, v, kind=kind, window=window,
+                                    q_positions=q_positions,
+                                    k_positions=k_positions)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_apply(p, x, *, gated: bool):
+    """SwiGLU (gated) or GELU MLP. x: (..., D)."""
+    dtype = x.dtype
+    if gated:
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dtype))
+        up = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dtype))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dtype))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(dtype))
+
+
+def init_mlp(key, d_model, d_ff, *, gated: bool):
+    ks = jax.random.split(key, 3)
+    t = {}
+    if gated:
+        t["w_gate"] = make_param(ks[0], (d_model, d_ff),
+                                 (tp.D_MODEL, tp.D_FF))
+    t["w_up"] = make_param(ks[1], (d_model, d_ff), (tp.D_MODEL, tp.D_FF))
+    t["w_down"] = make_param(ks[2], (d_ff, d_model), (tp.D_FF, tp.D_MODEL))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Loss: chunked cross-entropy (never materialises (B,S,V) logits)
+# ---------------------------------------------------------------------------
+
+
+def chunked_cross_entropy(x, w_head, labels, *, mask=None, chunk=512):
+    """Mean CE over tokens. x: (B,S,D), w_head: (D,V), labels: (B,S)."""
+    b, s, d = x.shape
+    nb = -(-s // chunk)
+    pad = nb * chunk - s
+    if mask is None:
+        mask = jnp.ones((b, s), bool)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xb = x.reshape(b, nb, chunk, d).swapaxes(0, 1)
+    lb = labels.reshape(b, nb, chunk).swapaxes(0, 1)
+    mb = mask.reshape(b, nb, chunk).swapaxes(0, 1)
+
+    v = w_head.shape[-1]
+
+    def step(carry, blk):
+        tot, cnt = carry
+        xc, lc, mc = blk
+        logits = jnp.einsum("bsd,dv->bsv", xc.astype(jnp.float32),
+                            w_head.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label logit via one-hot contraction: partitions cleanly when the
+        # vocab dim is model-sharded (take_along_axis would all-gather)
+        onehot = jax.nn.one_hot(lc, v, dtype=logits.dtype)
+        ll = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        tot = tot + jnp.sum(jnp.where(mc, lse - ll, 0.0))
+        cnt = cnt + jnp.sum(mc)
+        return (tot, cnt), None
+
+    # checkpoint the chunk step: backward recomputes the (B, chunk, V)
+    # logits instead of saving them per scan step (vocab 262k would OOM)
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(step),
+                                 (jnp.float32(0), jnp.float32(0)),
+                                 (xb, lb, mb))
+    return tot / jnp.maximum(cnt, 1.0)

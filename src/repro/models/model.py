@@ -1,0 +1,444 @@
+"""Full models: decoder-only LM (all LM-family archs) and enc-dec
+(whisper).  Layers are scanned over *periods* (stacked params) with the
+remainder unrolled — this keeps the HLO small for 80-layer models while
+preserving heterogeneous interleaves (DESIGN.md §3).
+
+API (used by launch/ and serving/):
+
+* ``model.init(rng) -> (params, axes)`` — axes are logical-axis twins
+  consumed by the tensor planner.
+* ``model.loss_fn(params, batch, ...) -> (loss, metrics)``
+* ``model.init_cache(batch, cache_len, dtype) -> (cache, cache_axes)``
+* ``model.prefill(params, batch, cache) -> (logits, cache)``
+* ``model.decode_step(params, cache, tokens, pos) -> (logits, cache)``
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensor_plan as tp
+from repro.models import blocks as blk
+from repro.models.layers import (
+    chunked_cross_entropy,
+    make_param,
+    rms_norm,
+    split_tree,
+    zeros_param,
+)
+
+
+def _stack_trees(trees):
+    """Stack (arr, axes) trees over a new leading LAYERS axis."""
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and hasattr(x[0], "shape"))
+    return jax.tree_util.tree_map(
+        lambda *leaves: (jnp.stack([l[0] for l in leaves]),
+                         (tp.LAYERS,) + leaves[0][1]),
+        *trees, is_leaf=is_leaf)
+
+
+def _stack_caches(caches):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def _closest_divisor(n: int) -> int:
+    """Divisor of n closest to sqrt(n) (for two-level remat scans)."""
+    best, target = 1, n ** 0.5
+    for d in range(1, n + 1):
+        if n % d == 0 and abs(d - target) < abs(best - target):
+            best = d
+    return best
+
+
+class DecoderLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        (self.period, self.slot_kinds, self.n_periods,
+         self.tail_kinds) = blk.period_structure(cfg)
+
+    # ------------------------------------------------------------- init --
+    def init(self, rng):
+        cfg = self.cfg
+        tree: dict = {
+            "embed": make_param(jax.random.fold_in(rng, 0),
+                                (cfg.vocab_size, cfg.d_model),
+                                (tp.VOCAB, tp.D_MODEL), scale=0.02),
+            "final_norm": zeros_param((cfg.d_model,), (tp.D_MODEL,)),
+        }
+        if not cfg.tie_embeddings:
+            tree["head"] = make_param(jax.random.fold_in(rng, 1),
+                                      (cfg.d_model, cfg.vocab_size),
+                                      (tp.D_MODEL, tp.VOCAB), scale=0.02)
+        slots = {}
+        for s, kind in enumerate(self.slot_kinds):
+            per = [blk.init_block(
+                jax.random.fold_in(rng, 100 + per_i * self.period + s),
+                cfg, kind) for per_i in range(self.n_periods)]
+            slots[f"slot{s}"] = _stack_trees(per)
+        tree["slots"] = slots
+        tail = {}
+        base = self.n_periods * self.period
+        for i, kind in enumerate(self.tail_kinds):
+            tail[f"tail{i}"] = blk.init_block(
+                jax.random.fold_in(rng, 100 + base + i), cfg, kind)
+        if tail:
+            tree["tail"] = tail
+        return split_tree(tree)
+
+    # ----------------------------------------------------------- helpers --
+    def _head_matrix(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    def _embed(self, params, batch):
+        if "embeds" in batch:
+            return batch["embeds"]
+        return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    # ----------------------------------------------------------- forward --
+    def forward(self, params, batch, *, positions=None, impl="auto",
+                groups=1, remat=False, compute_dtype=jnp.bfloat16,
+                shard_fn=None):
+        """Full-sequence forward (training). Returns (hidden, aux).
+
+        ``shard_fn`` pins activation sharding (batch-sharded) inside the
+        layer scan; without it GSPMD may propagate a feature-sharded,
+        batch-replicated layout from ZeRO-sharded params."""
+        cfg = self.cfg
+        sf = shard_fn or (lambda t: t)
+        x = sf(self._embed(params, batch).astype(compute_dtype))
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                         (b, s))
+
+        def period_body(carry, xs):
+            x, aux = carry
+            for sidx, kind in enumerate(self.slot_kinds):
+                x, _, a = blk.block_apply(
+                    xs[f"slot{sidx}"], x, cfg, kind, positions=positions,
+                    impl=impl, groups=groups)
+                x = sf(x)
+                aux = aux + a
+            return (x, aux), None
+
+        carry0 = (x, jnp.float32(0))
+        if remat and self.n_periods >= 8:
+            # sqrt-remat: two-level scan saves O(sqrt(L)) activations
+            # instead of O(L) (and dodges XLA hoisting a full-stack f32
+            # convert of the saved carries — see EXPERIMENTS.md §Dry-run)
+            n_seg = _closest_divisor(self.n_periods)
+            per_seg = self.n_periods // n_seg
+            slots_seg = jax.tree_util.tree_map(
+                lambda t: t.reshape((n_seg, per_seg) + t.shape[1:]),
+                params["slots"])
+
+            def seg_body(carry, seg_xs):
+                carry, _ = jax.lax.scan(jax.checkpoint(period_body),
+                                        carry, seg_xs)
+                return carry, None
+
+            (x, aux), _ = jax.lax.scan(jax.checkpoint(seg_body), carry0,
+                                       slots_seg)
+        else:
+            body = jax.checkpoint(period_body) if remat else period_body
+            (x, aux), _ = jax.lax.scan(body, carry0, params["slots"])
+        for i, kind in enumerate(self.tail_kinds):
+            def tail_fn(p, xx, kind=kind):
+                out, _, a = blk.block_apply(p, xx, cfg, kind,
+                                            positions=positions, impl=impl,
+                                            groups=groups)
+                return out, a
+            if remat:
+                tail_fn = jax.checkpoint(tail_fn)
+            x, a = tail_fn(params["tail"][f"tail{i}"], x)
+            aux = aux + a
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux
+
+    def loss_fn(self, params, batch, *, impl="auto", groups=1, remat=False,
+                compute_dtype=jnp.bfloat16, aux_weight=0.01,
+                shard_fn=None):
+        """Next-token CE (+ MoE aux). batch: tokens/embeds + labels."""
+        x, aux = self.forward(params, batch, impl=impl, groups=groups,
+                              remat=remat, compute_dtype=compute_dtype,
+                              shard_fn=shard_fn)
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        loss = chunked_cross_entropy(
+            x[:, :-1], self._head_matrix(params), labels[:, 1:],
+            mask=None if mask is None else mask[:, 1:])
+        total = loss + aux_weight * aux
+        return total, {"ce": loss, "aux": aux}
+
+    # ------------------------------------------------------------- cache --
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        caches = {}
+        for s, kind in enumerate(self.slot_kinds):
+            per = [blk.init_block_cache(cfg, kind, batch, cache_len, dtype)
+                   for _ in range(self.n_periods)]
+            caches[f"slot{s}"] = _stack_caches(per)
+        for i, kind in enumerate(self.tail_kinds):
+            caches[f"tail{i}"] = blk.init_block_cache(
+                cfg, kind, batch, cache_len, dtype)
+        return caches
+
+    def cache_axes(self):
+        """Logical-axes twin pytree of init_cache's output."""
+        cfg = self.cfg
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        axes = {}
+        for s, kind in enumerate(self.slot_kinds):
+            ax = blk.block_cache_axes(cfg, kind)
+            axes[f"slot{s}"] = jax.tree_util.tree_map(
+                lambda a: (None,) + a, ax, is_leaf=is_axes)
+        for i, kind in enumerate(self.tail_kinds):
+            axes[f"tail{i}"] = blk.block_cache_axes(cfg, kind)
+        return axes
+
+    def _with_cache(self, params, x, caches, positions, decode_pos,
+                    impl, groups, shard_fn=None):
+        cfg = self.cfg
+        sf = shard_fn or (lambda t: t)
+
+        def period_body(carry, xs):
+            x, aux = carry
+            slot_params, slot_caches = xs
+            new_caches = {}
+            for sidx, kind in enumerate(self.slot_kinds):
+                x, nc, a = blk.block_apply(
+                    slot_params[f"slot{sidx}"], x, cfg, kind,
+                    positions=positions, cache=slot_caches[f"slot{sidx}"],
+                    decode_pos=decode_pos, impl=impl, groups=groups)
+                x = sf(x)
+                new_caches[f"slot{sidx}"] = nc
+                aux = aux + a
+            return (x, aux), new_caches
+
+        slot_caches = {k: v for k, v in caches.items()
+                       if k.startswith("slot")}
+        (x, aux), new_slot_caches = jax.lax.scan(
+            period_body, (x, jnp.float32(0)),
+            (params["slots"], slot_caches))
+        new_caches = dict(new_slot_caches)
+        for i, kind in enumerate(self.tail_kinds):
+            x, nc, a = blk.block_apply(
+                params["tail"][f"tail{i}"], x, cfg, kind,
+                positions=positions, cache=caches[f"tail{i}"],
+                decode_pos=decode_pos, impl=impl, groups=groups)
+            new_caches[f"tail{i}"] = nc
+            aux = aux + a
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_caches
+
+    def prefill(self, params, batch, caches, *, impl="auto", groups=1,
+                compute_dtype=jnp.bfloat16, shard_fn=None):
+        """Process a prompt, fill caches, return last-token logits."""
+        sf = shard_fn or (lambda t: t)
+        x = sf(self._embed(params, batch).astype(compute_dtype))
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, new_caches = self._with_cache(params, x, caches, positions,
+                                         None, impl, groups,
+                                         shard_fn=shard_fn)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                            self._head_matrix(params).astype(jnp.float32))
+        return logits, new_caches
+
+    def decode_step(self, params, caches, tokens, pos, *, impl="auto",
+                    groups=1, compute_dtype=jnp.bfloat16, shard_fn=None):
+        """One decode step. tokens: (B,), pos: (B,) current positions."""
+        x = jnp.take(params["embed"], tokens[:, None],
+                     axis=0).astype(compute_dtype)
+        positions = pos[:, None]
+        x, new_caches = self._with_cache(params, x, caches, positions,
+                                         pos, impl, groups,
+                                         shard_fn=shard_fn)
+        logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                            self._head_matrix(params).astype(jnp.float32))
+        return logits, new_caches
+
+
+class EncDecLM:
+    """Whisper-style encoder-decoder; the audio frontend is a stub —
+    encoder inputs are precomputed (B, frames, d_model) embeddings."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.n_enc = cfg.encoder.n_layers
+        self.n_dec = cfg.n_layers
+
+    def init(self, rng):
+        cfg = self.cfg
+        tree: dict = {
+            "embed": make_param(jax.random.fold_in(rng, 0),
+                                (cfg.vocab_size, cfg.d_model),
+                                (tp.VOCAB, tp.D_MODEL)),
+            "head": make_param(jax.random.fold_in(rng, 1),
+                               (cfg.d_model, cfg.vocab_size),
+                               (tp.D_MODEL, tp.VOCAB)),
+            "enc_final_norm": zeros_param((cfg.d_model,), (tp.D_MODEL,)),
+            "final_norm": zeros_param((cfg.d_model,), (tp.D_MODEL,)),
+        }
+        enc = [blk.init_block(jax.random.fold_in(rng, 100 + i), cfg,
+                              "attn:global:dense")
+               for i in range(self.n_enc)]
+        dec = [blk.init_block(jax.random.fold_in(rng, 500 + i), cfg,
+                              "attn:global:dense", with_cross=True)
+               for i in range(self.n_dec)]
+        tree["encoder"] = _stack_trees(enc)
+        tree["decoder"] = _stack_trees(dec)
+        return split_tree(tree)
+
+    def encode(self, params, frames, *, impl="auto",
+               compute_dtype=jnp.bfloat16, remat=False):
+        cfg = self.cfg
+        x = frames.astype(compute_dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(x, xs):
+            x, _, _ = blk.block_apply(xs, x, cfg, "attn:global:dense",
+                                      positions=positions, impl=impl,
+                                      attn_mode="bidir")
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_h):
+        """Precompute per-decoder-layer cross K/V: (L, B, F, KV, hd)."""
+        cfg = self.cfg
+        dtype = enc_h.dtype
+
+        def per_layer(cp):
+            k = jnp.einsum("bsd,dhk->bshk", enc_h,
+                           cp["wk"].astype(dtype))
+            v = jnp.einsum("bsd,dhk->bshk", enc_h,
+                           cp["wv"].astype(dtype))
+            return k, v
+
+        return jax.vmap(per_layer)(params["decoder"]["cross"])
+
+    def _decoder(self, params, x, positions, decode_pos, caches, enc_kv,
+                 impl, shard_fn=None):
+        cfg = self.cfg
+        sf = shard_fn or (lambda t: t)
+
+        def body(carry, xs):
+            x = carry
+            layer_params, layer_cache, (ck, cv) = xs
+            x, nc, _ = blk.block_apply(
+                layer_params, x, cfg, "attn:global:dense",
+                positions=positions, cache=layer_cache,
+                decode_pos=decode_pos, impl=impl, enc_kv=(ck, cv))
+            return sf(x), nc
+
+        x, new_caches = jax.lax.scan(
+            body, x, (params["decoder"], caches, enc_kv))
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches
+
+    def loss_fn(self, params, batch, *, impl="auto", groups=1, remat=False,
+                compute_dtype=jnp.bfloat16, aux_weight=0.0,
+                shard_fn=None):
+        cfg = self.cfg
+        sf = shard_fn or (lambda t: t)
+        enc_h = sf(self.encode(params, batch["frames"], impl=impl,
+                               compute_dtype=compute_dtype, remat=remat))
+        enc_kv = self._cross_kv(params, enc_h)
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(carry, xs):
+            x = carry
+            layer_params, (ck, cv) = xs
+            fn = lambda lp, xx: sf(blk.block_apply(
+                lp, xx, cfg, "attn:global:dense", positions=positions,
+                impl=impl, enc_kv=(ck, cv))[0])
+            if remat:
+                fn = jax.checkpoint(fn)
+            return fn(layer_params, x), None
+
+        x, _ = jax.lax.scan(body, x, (params["decoder"], enc_kv))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        loss = chunked_cross_entropy(
+            x[:, :-1], params["head"], batch["labels"][:, 1:],
+            mask=None if batch.get("mask") is None
+            else batch["mask"][:, 1:])
+        return loss, {"ce": loss, "aux": jnp.float32(0)}
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        per = [blk.init_block_cache(cfg, "attn:global:dense", batch,
+                                    cache_len, dtype)
+               for _ in range(self.n_dec)]
+        caches = {"self": _stack_caches(per)}
+        f = cfg.encoder.n_frames
+        caches["cross_k"] = jnp.zeros(
+            (self.n_dec, batch, f, cfg.n_kv_heads, cfg.head_dim), dtype)
+        caches["cross_v"] = jnp.zeros_like(caches["cross_k"])
+        return caches
+
+    def cache_axes(self):
+        cfg = self.cfg
+        ax = blk.block_cache_axes(cfg, "attn:global:dense")
+        lift = lambda a: (None,) + a
+        axes = {"self": jax.tree_util.tree_map(
+            lift, ax, is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))}
+        cross_ax = (None, tp.BATCH, tp.FRAMES, tp.KV_HEADS, tp.HEAD_DIM)
+        axes["cross_k"] = cross_ax
+        axes["cross_v"] = cross_ax
+        return axes
+
+    def prefill(self, params, batch, caches, *, impl="auto", groups=1,
+                compute_dtype=jnp.bfloat16, shard_fn=None):
+        """Encode frames, precompute cross KV, prefill decoder prompt."""
+        sf = shard_fn or (lambda t: t)
+        enc_h = sf(self.encode(params, batch["frames"], impl=impl,
+                               compute_dtype=compute_dtype))
+        ck, cv = self._cross_kv(params, enc_h)
+        tokens = batch["tokens"]
+        x = sf(jnp.take(params["embed"], tokens,
+                        axis=0).astype(compute_dtype))
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, new_self = self._decoder(params, x, positions, None,
+                                    caches["self"], (ck, cv), impl,
+                                    shard_fn=shard_fn)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+        new_caches = {"self": new_self,
+                      "cross_k": ck.astype(caches["cross_k"].dtype),
+                      "cross_v": cv.astype(caches["cross_v"].dtype)}
+        return logits, new_caches
+
+    def decode_step(self, params, caches, tokens, pos, *, impl="auto",
+                    groups=1, compute_dtype=jnp.bfloat16, shard_fn=None):
+        x = jnp.take(params["embed"], tokens[:, None],
+                     axis=0).astype(compute_dtype)
+        positions = pos[:, None]
+        enc_kv = (caches["cross_k"].astype(compute_dtype),
+                  caches["cross_v"].astype(compute_dtype))
+        x, new_self = self._decoder(params, x, positions, pos,
+                                    caches["self"], enc_kv, impl,
+                                    shard_fn=shard_fn)
+        logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+        new_caches = dict(caches)
+        new_caches["self"] = new_self
+        return logits, new_caches
+
+
+def build_model(cfg):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

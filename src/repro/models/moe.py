@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+MoE dispatch is the model-stack incarnation of the paper's
+``schedule(dynamic)``: tokens are loop iterations, experts are workers,
+and the capacity factor plays the role of the 10x over-decomposition —
+bounding imbalance when the router's "schedule" is skewed.  Dispatch is
+performed *per group* (a group = one data-parallel shard's tokens), so
+the gather/scatter stays local to the shard and only the expert GEMMs
+touch the expert-sharded (model-axis) weights — the same
+shard-the-written-slices / replicate-the-read-buffers split the pragma
+planner derives for explicit loops.
+
+Supports: top-k routing (renormalised gates), shared experts with a
+sigmoid gate (qwen2-moe), a dense FFN residual (arctic), and a
+load-balance auxiliary loss (Switch-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensor_plan as tp
+from repro.models.layers import init_mlp, make_param, mlp_apply
+
+
+def init_moe(key, d_model: int, moe_cfg):
+    ks = jax.random.split(key, 8)
+    e, fe = moe_cfg.e_alloc, moe_cfg.d_expert
+    t = {
+        "router": make_param(ks[0], (d_model, moe_cfg.n_experts),
+                             (tp.D_MODEL, tp.EXPERTS)),
+        "w_gate": make_param(ks[1], (e, d_model, fe),
+                             (tp.EXPERTS, tp.D_MODEL, tp.D_EXPERT)),
+        "w_up": make_param(ks[2], (e, d_model, fe),
+                           (tp.EXPERTS, tp.D_MODEL, tp.D_EXPERT)),
+        "w_down": make_param(ks[3], (e, fe, d_model),
+                             (tp.EXPERTS, tp.D_EXPERT, tp.D_MODEL)),
+    }
+    if moe_cfg.n_shared:
+        t["shared"] = init_mlp(ks[4], d_model, moe_cfg.shared_d_ff,
+                               gated=True)
+        t["shared_gate"] = make_param(ks[5], (d_model, 1),
+                                      (tp.D_MODEL, None))
+    if moe_cfg.dense_residual_d_ff:
+        t["dense"] = init_mlp(ks[6], d_model, moe_cfg.dense_residual_d_ff,
+                              gated=True)
+    return t
+
+
+def _dispatch_one_group(x, logits, top_k: int, capacity: int):
+    """x: (T,D), logits: (T,E) -> (y (T,D) contribution, aux metrics)."""
+    t, d = x.shape
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)    # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    sel = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)   # (T,k,E)
+    mask = jnp.sum(sel, axis=1)                          # (T,E) 0/1
+    # position of each token within its expert's capacity buffer
+    pos = jnp.cumsum(mask, axis=0) * mask - 1            # (T,E)
+    keep = jnp.logical_and(pos >= 0, pos < capacity)
+
+    # scatter token ids into (E, C) dispatch table
+    tok_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, e))
+    flat_e = jnp.broadcast_to(jnp.arange(e)[None, :], (t, e))
+    pos_safe = jnp.where(keep, pos, capacity)            # OOB -> dropped
+    table = jnp.full((e, capacity), t, jnp.int32)        # t == invalid
+    table = table.at[flat_e.reshape(-1), pos_safe.reshape(-1)].set(
+        tok_ids.reshape(-1), mode="drop")
+    slot_valid = table < t                               # (E,C)
+    table_safe = jnp.minimum(table, t - 1)
+
+    gathered = x[table_safe] * slot_valid[..., None].astype(x.dtype)
+
+    # combine weights per slot
+    w_tok = (probs * mask * keep).astype(jnp.float32)    # (T,E) gate per pair
+    w_tok = w_tok / jnp.maximum(
+        jnp.sum(w_tok, axis=-1, keepdims=True), 1e-9)
+    w_slot = w_tok[table_safe, jnp.arange(e)[:, None]] \
+        * slot_valid.astype(jnp.float32)                 # (E,C)
+
+    # load-balance aux (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(mask.astype(jnp.float32), axis=0)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_p)
+    dropped = 1.0 - jnp.sum(keep) / jnp.maximum(jnp.sum(mask), 1)
+    return gathered, table_safe, slot_valid, w_slot, aux, dropped
+
+
+def moe_apply(p, x, moe_cfg, *, groups: int = 1):
+    """x: (B,S,D) -> (y, aux_loss). ``groups`` = DP shards: dispatch is
+    local to each group (see module docstring)."""
+    b, s, d = x.shape
+    g = max(1, min(groups, b)) if b % max(1, min(groups, b)) == 0 else 1
+    xt = x.reshape(g, (b // g) * s, d)
+    tokens = xt.shape[1]
+    e, k = moe_cfg.n_experts, moe_cfg.top_k
+    capacity = max(1, int(k * tokens * moe_cfg.capacity_factor / e))
+
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(x.dtype))
+    if moe_cfg.e_alloc > e:
+        # padded (never-routed) experts unlock EP sharding (§Perf-E)
+        pad = jnp.full(logits.shape[:-1] + (moe_cfg.e_alloc - e,), -1e9,
+                       logits.dtype)
+        logits = jnp.concatenate([logits, pad], axis=-1)
+
+    def per_group(xg, lg):
+        gathered, table, valid, w_slot, aux, dropped = _dispatch_one_group(
+            xg, lg, k, capacity)
+        h_gate = jnp.einsum("ecd,edf->ecf", gathered,
+                            p["w_gate"].astype(x.dtype))
+        h_up = jnp.einsum("ecd,edf->ecf", gathered,
+                          p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(h_gate) * h_up
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+        out = out * w_slot[..., None].astype(x.dtype)
+        y = jnp.zeros_like(xg)
+        y = y.at[table.reshape(-1)].add(
+            out.reshape(-1, d), mode="drop")
+        return y, aux, dropped
+
+    y, aux, dropped = jax.vmap(per_group)(xt, logits)
+    y = y.reshape(b, s, d)
+    aux_loss = jnp.mean(aux)
+
+    if "shared" in p:
+        gate = jax.nn.sigmoid(
+            jnp.einsum("bsd,do->bso", x, p["shared_gate"].astype(x.dtype)))
+        y = y + gate * mlp_apply(p["shared"], x, gated=True)
+    if "dense" in p:
+        y = y + mlp_apply(p["dense"], x, gated=True)
+    return y, aux_loss

@@ -1,0 +1,199 @@
+"""Mamba-2 SSD (state-space duality) block. [arXiv:2405.21060]
+
+The sequence loop of an SSM is a *loop-carried dependence* — the exact
+case OMP2MPI's Loop Analysis rejects (DESIGN.md §Arch-applicability).
+SSD's chunked reformulation restores parallelism: intra-chunk work is a
+dense parallel loop (distributable), and only the O(S/Q) chunk-state
+recurrence remains sequential (an associative ``recurrent`` clause,
+lowered to ``lax.scan``).  That is the faithful adaptation of the paper's
+technique to this family.
+
+Layout: x (B,S,D); heads h = d_inner/head_dim; shared single-group B/C of
+width d_state.  The Pallas kernel in repro.kernels/ssd_scan.py implements
+the intra-chunk part with VMEM tiling; this module is its jnp oracle twin
+and the default lowering path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensor_plan as tp
+from repro.models.layers import make_param, zeros_param
+
+
+def init_ssm(key, d_model: int, ssm_cfg):
+    din = ssm_cfg.d_inner(d_model)
+    nh = ssm_cfg.n_heads(d_model)
+    ds = ssm_cfg.d_state
+    cw = ssm_cfg.d_conv
+    ks = jax.random.split(key, 8)
+    t = {
+        "w_z": make_param(ks[0], (d_model, din), (tp.D_MODEL, tp.D_INNER)),
+        "w_x": make_param(ks[1], (d_model, din), (tp.D_MODEL, tp.D_INNER)),
+        "w_B": make_param(ks[2], (d_model, ds), (tp.D_MODEL, tp.D_STATE)),
+        "w_C": make_param(ks[3], (d_model, ds), (tp.D_MODEL, tp.D_STATE)),
+        "w_dt": make_param(ks[4], (d_model, nh), (tp.D_MODEL, tp.HEADS)),
+        "conv_x": make_param(ks[5], (cw, din), (tp.CONV, tp.D_INNER), 0.5),
+        "conv_B": make_param(ks[6], (cw, ds), (tp.CONV, tp.D_STATE), 0.5),
+        "conv_C": make_param(ks[7], (cw, ds), (tp.CONV, tp.D_STATE), 0.5),
+        # A in (-16, -1): stable decay; dt_bias ~ softplus^-1(0.01..0.1)
+        "A_log": (jnp.log(jnp.linspace(1.0, 16.0, nh)), (tp.HEADS,)),
+        "D": (jnp.ones((nh,)), (tp.HEADS,)),
+        "dt_bias": (jnp.full((nh,), -4.6), (tp.HEADS,)),
+    }
+    return t
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv. u: (B,S,C), w: (cw,C).
+
+    ``state`` ((B, cw-1, C)) prepends history for decode/continuation;
+    returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    full = jnp.concatenate([state, u], axis=1)           # (B, S+cw-1, C)
+    y = jnp.zeros_like(u)
+    for k in range(cw):
+        y = y + full[:, k:k + u.shape[1]] * w[k]
+    new_state = full[:, full.shape[1] - (cw - 1):]
+    return y, new_state
+
+
+def _segsum_decay(a):
+    """a: (..., Q, h) cumulative dA. Returns exp(a_i - a_j) masked i>=j:
+    (..., Q, Q, h)."""
+    q = a.shape[-2]
+    seg = a[..., :, None, :] - a[..., None, :, :]
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[..., None]
+    return jnp.where(mask, jnp.exp(seg), 0.0)
+
+
+def ssd_chunked(xh, dt, A, Bc, Cc, D, *, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,h,p); dt: (B,S,h) (post-softplus); A: (h,) negative;
+    Bc, Cc: (B,S,s); D: (h,). Returns (y (B,S,h,p), h_final (B,h,p,s)).
+    """
+    b, s, h, p = xh.shape
+    ds = Bc.shape[-1]
+    q = chunk
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+    xc = xh.reshape(b, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, q, h).astype(f32)
+    Bcc = Bc.reshape(b, nc, q, ds).astype(f32)
+    Ccc = Cc.reshape(b, nc, q, ds).astype(f32)
+
+    dA = dtc * A                                         # (b,nc,q,h) <= 0
+    a = jnp.cumsum(dA, axis=2)
+    decay = _segsum_decay(a)                             # (b,nc,q,q,h)
+    cb = jnp.einsum("bcqs,bcks->bcqk", Ccc, Bcc)
+    scores = cb[..., None] * decay * dtc[:, :, None]     # (b,nc,q,k,h)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xc)
+
+    # per-chunk state contribution and total decay
+    a_last = a[:, :, -1]                                 # (b,nc,h)
+    w = jnp.exp(a_last[:, :, None] - a) * dtc            # (b,nc,q,h)
+    h_chunk = jnp.einsum("bckh,bcks,bckhp->bchps", w, Bcc, xc)
+    t_chunk = jnp.exp(a_last)                            # (b,nc,h)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, ds), f32)
+
+    def step(hprev, blk):
+        hc, tc = blk                                     # (b,h,p,s), (b,h)
+        hnew = hprev * tc[:, :, None, None] + hc
+        return hnew, hprev
+
+    h_final, h_prevs = jax.lax.scan(
+        step, h0.astype(f32),
+        (h_chunk.swapaxes(0, 1), t_chunk.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                     # (b,nc,h,p,s)
+
+    y_inter = jnp.einsum("bcqs,bchps->bcqhp", Ccc, h_prevs) \
+        * jnp.exp(a)[..., None]
+    y = (y_intra + y_inter + xc * D[:, None]).reshape(b, nc * q, h, p)
+    return y[:, :s].astype(xh.dtype), h_final
+
+
+def ssm_apply(p, x, ssm_cfg, *, cache=None):
+    """Full SSD block. x: (B,S,D) -> (y (B,S,D), new_cache).
+
+    ``cache``: {"h": (B,h,p,s), "conv": (B,cw-1,din+2ds)} for decode /
+    chunked prefill continuation; None for fresh sequences.
+    """
+    b, s, d = x.shape
+    dtype = x.dtype
+    din = p["w_x"].shape[1]
+    nh = p["w_dt"].shape[1]
+    hd = din // nh
+    ds = p["w_B"].shape[1]
+
+    z = jnp.einsum("bsd,dk->bsk", x, p["w_z"].astype(dtype))
+    xin = jnp.einsum("bsd,dk->bsk", x, p["w_x"].astype(dtype))
+    Bin = jnp.einsum("bsd,dk->bsk", x, p["w_B"].astype(dtype))
+    Cin = jnp.einsum("bsd,dk->bsk", x, p["w_C"].astype(dtype))
+    dt = jnp.einsum("bsd,dk->bsk", x, p["w_dt"].astype(dtype)) \
+        + p["dt_bias"].astype(dtype)
+
+    conv_w = jnp.concatenate(
+        [p["conv_x"], p["conv_B"], p["conv_C"]], axis=1).astype(dtype)
+    u = jnp.concatenate([xin, Bin, Cin], axis=2)
+    conv_state = None if cache is None else cache["conv"]
+    u, new_conv = _causal_conv(u, conv_w, conv_state)
+    u = jax.nn.silu(u)
+    xin, Bin, Cin = jnp.split(u, [din, din + ds], axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, s, nh, hd)
+    h0 = None if cache is None else cache["h"]
+
+    if s == 1 and cache is not None:
+        # decode: one recurrence step, no chunking
+        dA = jnp.exp(dt[:, 0] * A)                       # (b,h)
+        upd = jnp.einsum("bh,bs,bhp->bhps", dt[:, 0],
+                         Bin[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        h_new = h0 * dA[:, :, None, None] + upd
+        y = jnp.einsum("bs,bhps->bhp", Cin[:, 0].astype(jnp.float32), h_new)
+        y = y + xh[:, 0].astype(jnp.float32) * p["D"][:, None]
+        y = y[:, None].astype(dtype)                     # (b,1,h,p)
+        h_final = h_new
+    else:
+        y, h_final = ssd_chunked(
+            xh, dt, A, Bin, Cin, p["D"].astype(jnp.float32),
+            chunk=ssm_cfg.chunk, h0=h0)
+
+    y = y.reshape(b, s, din) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dtype))
+    new_cache = {"h": h_final, "conv": new_conv}
+    return out, new_cache
+
+
+def init_ssm_block(key, d_model: int, ssm_cfg):
+    t = init_ssm(key, d_model, ssm_cfg)
+    din = ssm_cfg.d_inner(d_model)
+    k_out = jax.random.fold_in(key, 99)
+    t["out_proj"] = make_param(k_out, (din, d_model),
+                               (tp.D_INNER, tp.D_MODEL))
+    return t
+
+
+def init_ssm_cache(batch: int, d_model: int, ssm_cfg, dtype=jnp.bfloat16):
+    din = ssm_cfg.d_inner(d_model)
+    nh = ssm_cfg.n_heads(d_model)
+    return {
+        "h": jnp.zeros((batch, nh, ssm_cfg.head_dim, ssm_cfg.d_state),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, ssm_cfg.d_conv - 1,
+                           din + 2 * ssm_cfg.d_state), dtype),
+    }

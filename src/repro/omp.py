@@ -1,0 +1,49 @@
+"""Public facade for the OMP2MPI engine: ``from repro import omp``.
+
+Mirrors the OpenMP surface the paper consumes:
+
+* ``@omp.parallel_for(stop=N, schedule=omp.dynamic(), reduction={...})``
+  annotates a loop body — the ``#pragma omp parallel for target mpi``.
+* calling the resulting program runs the *shared-memory* semantics
+  (the original OpenMP program);
+* ``omp.to_mpi(program, mesh)`` performs the source-to-source
+  transformation and returns the distributed ("MPI") program.
+"""
+from repro.core.context import (  # noqa: F401
+    Affine,
+    ContextInfo,
+    ReadKind,
+    VarClass,
+    WriteKind,
+    analyze_context,
+)
+from repro.core.loop import LoopInfo, LoopNotCanonical, analyze_loop  # noqa: F401
+from repro.core.plan import DistPlan, KAffine, make_plan  # noqa: F401
+from repro.core.pragma import (  # noqa: F401
+    DYNAMIC,
+    GUIDED,
+    STATIC,
+    At,
+    ParallelFor,
+    Put,
+    Red,
+    Schedule,
+    at,
+    dynamic,
+    guided,
+    parallel_for,
+    put,
+    red,
+    static,
+)
+from repro.core.schedule import (  # noqa: F401
+    ChunkPlan,
+    guided_chunk_size,
+    make_chunk_plan,
+    paper_chunk_size,
+)
+from repro.core.transform import (  # noqa: F401
+    DistributedProgram,
+    run_reference,
+    to_mpi,
+)

@@ -1,0 +1,24 @@
+"""Optimizers and gradient machinery (no external deps).
+
+* AdamW — default for <=20B configs.
+* Adafactor — factored second moment; the only way the 398B/480B train
+  cells fit 16 GB/chip (DESIGN.md §5).
+* global-norm clipping, cosine-with-warmup schedule,
+* gradient accumulation (microbatching),
+* int8 error-feedback gradient compression for the DP all-reduce
+  (beyond-paper distributed-optimization trick; EXPERIMENTS.md §Perf).
+"""
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.adafactor import adafactor_init, adafactor_update  # noqa: F401
+from repro.optim.api import (  # noqa: F401
+    Optimizer,
+    make_optimizer,
+)
+from repro.optim.grad import (  # noqa: F401
+    clip_by_global_norm,
+    compress_int8,
+    compressed_allreduce_tree,
+    decompress_int8,
+    global_norm,
+)
+from repro.optim.schedule import cosine_warmup  # noqa: F401

@@ -1,0 +1,120 @@
+"""Adafactor (Shazeer & Stern, 2018): factored second moment.
+
+For a (r, c) matrix the second-moment estimate is stored as a rank-1
+outer product of row/col statistics — O(r + c) instead of O(r*c) — which
+is what lets the 398B/480B train cells hold optimizer state in 16 GB
+chips.  >=2D params factor over the two largest dims; 1D params keep a
+full second moment.  Momentum is optional bf16 (off by default, as in
+T5X large-model recipes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored_dims(shape):
+    """Sorted indices of the two largest dims (factored), None for <2D."""
+    if len(shape) < 2:
+        return None
+    order = sorted(range(len(shape)), key=lambda i: shape[i])
+    return tuple(sorted(order[-2:]))
+
+
+def adafactor_init(params, *, momentum: bool = False):
+    def per_param(p):
+        dims = _factored_dims(p.shape)
+        if dims is None:
+            st = {"v": jnp.zeros(p.shape, jnp.float32)}
+        else:
+            d0, d1 = dims                       # d0 < d1
+            row_shape = tuple(s for i, s in enumerate(p.shape) if i != d1)
+            col_shape = tuple(s for i, s in enumerate(p.shape) if i != d0)
+            st = {"vr": jnp.zeros(row_shape, jnp.float32),
+                  "vc": jnp.zeros(col_shape, jnp.float32)}
+        if momentum:
+            st["m"] = jnp.zeros(p.shape, jnp.bfloat16)
+        return st
+
+    is_leaf = lambda x: hasattr(x, "shape") and hasattr(x, "dtype")
+    return {
+        "per_param": jax.tree_util.tree_map(per_param, params,
+                                            is_leaf=is_leaf),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, *, lr, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0,
+                     momentum_beta=0.9, stream_leading: int = 0):
+    """``stream_leading`` (opt-in, 0=off): >=3D params with a leading dim
+    >= this value update via ``lax.map`` over that dim.  Hypothesised to
+    shrink the f32 working set to one layer slice; MEASURED WORSE on
+    arctic-480b (+10 GB — the map's input/output stacks stay fully live
+    and lose the elementwise buffer reuse; EXPERIMENTS.md §Perf-G), so it
+    is off by default.  Per-slice math is exact either way (the factored
+    dims are never the leading stack dim)."""
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    beta2 = 1.0 - c ** (-decay)
+
+    def upd_block(g, st, p, dims):
+        """One (possibly sliced) block; dims are the factored axes."""
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if dims is None:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            new_st = {"v": v}
+            update = g * jax.lax.rsqrt(v)
+        else:
+            d0, d1 = dims                       # d0 < d1
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=d1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=d0)
+            new_st = {"vr": vr, "vc": vc}
+            # update = g / (sqrt(vr / mean_d0(vr)) (x) sqrt(vc))
+            denom = jnp.mean(vr, axis=d0, keepdims=True)
+            row_factor = jax.lax.rsqrt(
+                jnp.maximum(vr / jnp.maximum(denom, eps), eps))
+            col_factor = jax.lax.rsqrt(jnp.maximum(vc, eps))
+            update = (g * jnp.expand_dims(row_factor, d1)
+                      * jnp.expand_dims(col_factor, d0))
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        if "m" in st:
+            m = momentum_beta * st["m"].astype(jnp.float32) \
+                + (1 - momentum_beta) * update
+            new_st["m"] = m.astype(jnp.bfloat16)
+            update = m
+        new_p = p.astype(jnp.float32) - lr * update \
+            - lr * weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), new_st
+
+    def upd(g, st, p):
+        dims = _factored_dims(p.shape)
+        stream = (stream_leading and p.ndim >= 3 and dims is not None
+                  and 0 not in dims and p.shape[0] >= stream_leading)
+        if not stream:
+            return upd_block(g, st, p, dims)
+        sliced_dims = tuple(d - 1 for d in dims)
+
+        def one(slices):
+            gl, vrl, vcl, pl = slices
+            stl = {"vr": vrl, "vc": vcl}
+            if "m" in st:
+                stl["m"] = slices[4]
+            return upd_block(gl, stl, pl, sliced_dims)
+
+        args = (g, st["vr"], st["vc"], p)
+        if "m" in st:
+            args = args + (st["m"],)
+        new_p, new_st = jax.lax.map(one, args)
+        return new_p, new_st
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["per_param"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_s = tdef.unflatten([o[1] for o in out])
+    return new_p, {"per_param": new_s, "count": count}

@@ -1,0 +1,64 @@
+"""Uniform optimizer facade used by the train step builder."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adafactor import _factored_dims, adafactor_init, adafactor_update
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]      # (grads, state, params, lr=) -> (p, s)
+
+
+def make_optimizer(name: str, *, weight_decay: float = 0.1) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(
+            "adamw", adamw_init,
+            lambda g, s, p, lr: adamw_update(
+                g, s, p, lr=lr, weight_decay=weight_decay))
+    if name == "adafactor":
+        return Optimizer(
+            "adafactor", adafactor_init,
+            lambda g, s, p, lr: adafactor_update(
+                g, s, p, lr=lr, weight_decay=0.0))
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def opt_state_axes(name: str, params_shapes, params_axes):
+    """Logical-axes tree matching the optimizer state structure, so the
+    tensor planner can shard optimizer state exactly like its params
+    (ZeRO-1/2 falls out of the same rules)."""
+    is_shape = lambda x: hasattr(x, "shape")
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    if name == "adamw":
+        return {
+            "m": params_axes,
+            "v": params_axes,
+            "count": (),
+        }
+    if name == "adafactor":
+        def per_param(shape_struct, axes):
+            dims = _factored_dims(shape_struct.shape)
+            if dims is None:
+                return {"v": axes}
+            d0, d1 = dims
+            vr_axes = tuple(a for i, a in enumerate(axes) if i != d1)
+            vc_axes = tuple(a for i, a in enumerate(axes) if i != d0)
+            return {"vr": vr_axes, "vc": vc_axes}
+
+        flat_s, tdef = jax.tree_util.tree_flatten(params_shapes,
+                                                  is_leaf=is_shape)
+        flat_a = tdef.flatten_up_to(params_axes)
+        per = tdef.unflatten([per_param(s, a)
+                              for s, a in zip(flat_s, flat_a)])
+        return {"per_param": per, "count": ()}
+    raise ValueError(f"unknown optimizer {name!r}")

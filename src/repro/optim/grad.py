@@ -1,0 +1,121 @@
+"""Gradient utilities: clipping, accumulation support and int8
+error-feedback compression for the DP all-reduce.
+
+The compression trick (1-bit/8-bit SGD lineage, Seide et al. 2014): each
+worker quantises its gradient shard to int8 with a per-tensor scale,
+keeps the quantisation error as feedback added to the next step's
+gradient, and the all-reduce moves 4x fewer bytes.  On the roofline this
+divides the DP-gradient collective term by ~4 at the cost of two cheap
+elementwise passes — measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def compress_int8(g, error):
+    """Quantise g+error to int8 with per-tensor scale.
+
+    Returns (q, scale, new_error)."""
+    gf = g.astype(jnp.float32) + error
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def tree_compress_int8(grads, errors):
+    """Apply error-feedback int8 compression leaf-wise.
+
+    Returns (q_tree, scale_tree, new_error_tree)."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(errors)
+    out = [compress_int8(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = tdef.unflatten([o[0] for o in out])
+    scales = tdef.unflatten([o[1] for o in out])
+    errs = tdef.unflatten([o[2] for o in out])
+    return qs, scales, errs
+
+
+def tree_decompress_int8(qs, scales):
+    return jax.tree_util.tree_map(decompress_int8, qs, scales)
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# Compressed all-reduce (shard_map collective)
+# ---------------------------------------------------------------------------
+
+
+def _compressed_allreduce_leaf(g, err, axis, p):
+    """Two-hop int8 mean over ``axis``: quantise -> all_to_all int8 slices
+    -> local segment mean -> re-quantise -> all_gather int8.
+
+    Wire ~ S/4 + S/4 int8 bytes vs ~2S fp32 for a ring all-reduce: ~4x.
+    Error feedback makes the long-run average exact."""
+    shape = g.shape
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    k = -(-n // p)
+    pad = p * k - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        err_f = jnp.pad(err.reshape(-1), (0, pad))
+    else:
+        err_f = err.reshape(-1)
+
+    q, scale, new_err = compress_int8(flat, err_f)
+    slices = q.reshape(p, k)
+    recv = jax.lax.all_to_all(slices[:, None], axis, split_axis=0,
+                              concat_axis=0)[:, 0]          # (P, k) int8
+    scales = jax.lax.all_gather(scale, axis)                 # (P,)
+    seg_mean = jnp.sum(recv.astype(jnp.float32)
+                       * scales[:, None], axis=0) / p        # (k,)
+
+    q2, scale2, _ = compress_int8(seg_mean, jnp.zeros_like(seg_mean))
+    all_q2 = jax.lax.all_gather(q2, axis)                    # (P, k) int8
+    all_s2 = jax.lax.all_gather(scale2, axis)                # (P,)
+    full = (all_q2.astype(jnp.float32)
+            * all_s2[:, None]).reshape(-1)
+    if pad:
+        full = full[:n]
+        new_err = new_err[:n]
+    return full.reshape(shape).astype(g.dtype), new_err.reshape(shape)
+
+
+def compressed_allreduce_tree(grads, errors, *, axis: str, num_devices: int):
+    """int8 error-feedback gradient mean across ``axis``.
+
+    Call INSIDE a shard_map region whose per-device gradients differ
+    (explicit-DP steps); returns (mean tree, new error tree).  Wire cost
+    ~4x below a float all-reduce (EXPERIMENTS.md §Perf)."""
+    out = jax.tree_util.tree_map(
+        lambda g, e: _compressed_allreduce_leaf(g, e, axis, num_devices),
+        grads, errors)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 \
+        and hasattr(x[0], "shape")
+    means = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_pair)
+    errs = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_pair)
+    return means, errs

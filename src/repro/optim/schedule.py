@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, base_lr: float, warmup_steps: int,
+                  total_steps: int, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(1.0, warmup_steps)
+    prog = (step - warmup_steps) / jnp.maximum(
+        1.0, total_steps - warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)

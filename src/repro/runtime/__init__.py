@@ -1,0 +1,4 @@
+"""Distributed runtime: fault tolerance, straggler mitigation, elasticity."""
+from repro.runtime.fault_tolerance import FaultTolerantLoop  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import plan_elastic_remesh, reshard_tree  # noqa: F401

@@ -1,0 +1,52 @@
+"""Elastic scaling: re-mesh planning and checkpoint resharding.
+
+When the fleet grows or shrinks (node joins / eviction), the job
+restarts with a new device count.  Two invariants make this cheap:
+
+* params are saved *unsharded per host shard* by the checkpointer, so a
+  restore under a different mesh just re-places the same arrays with the
+  new NamedShardings (GSPMD reshards on first use);
+* the data pipeline is keyed by (seed, step, shard), so shard
+  re-numbering is a pure function of the new topology.
+
+``plan_elastic_remesh`` picks the nearest valid (data, model) factoring
+for the new chip count; ``reshard_tree`` re-places a restored tree under
+the new mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    note: str
+
+
+def plan_elastic_remesh(n_devices: int, *, model_parallel: int,
+                        axes=("data", "model")) -> RemeshPlan:
+    """Keep model-parallel degree fixed (it is tied to the weight layout
+    budget), flex the data axis; shrink TP only if chips < TP."""
+    tp = model_parallel
+    note = ""
+    while n_devices % tp != 0 or n_devices < tp:
+        tp //= 2
+        note = f"model axis shrunk to {tp} (chip count {n_devices})"
+        if tp == 0:
+            raise ValueError("no valid mesh factoring")
+    dp = n_devices // tp
+    return RemeshPlan(old_shape=(-1, model_parallel),
+                      new_shape=(dp, tp), axes=tuple(axes), note=note)
+
+
+def reshard_tree(tree, specs, mesh: Mesh):
+    """Re-place every leaf under the new mesh (GSPMD moves the bytes)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, specs)

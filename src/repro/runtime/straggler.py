@@ -1,0 +1,83 @@
+"""Straggler detection and mitigation.
+
+In lock-step SPMD a slow host stalls every step (the collective waits).
+Mitigations available without breaking SPMD semantics:
+
+1. *detect* — per-step wall-time EWMA + spike counting (this module);
+2. *re-balance* — the paper's own answer: dynamic-schedule
+   over-decomposition.  The pragma engine's cyclic chunking
+   (core/schedule.py) already deals 10x more chunks than devices, so a
+   persistently slow device can be given fewer chunks by regenerating
+   the chunk plan with a ``weights`` vector (``rebalance_chunks``);
+3. *escalate* — report the host for eviction (elastic re-mesh,
+   runtime/elastic.py) once it exceeds the spike budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    ewma_alpha: float = 0.2
+    spike_factor: float = 2.0
+    spike_budget: int = 5
+
+    _ewma: float | None = None
+    spikes: int = 0
+    steps: int = 0
+
+    def observe(self, step_time_s: float) -> str:
+        """Returns "ok" | "spike" | "evict"."""
+        self.steps += 1
+        if self._ewma is None:
+            self._ewma = step_time_s
+            return "ok"
+        status = "ok"
+        if step_time_s > self.spike_factor * self._ewma:
+            self.spikes += 1
+            status = "spike"
+            if self.spikes >= self.spike_budget:
+                status = "evict"
+        else:
+            self.spikes = max(0, self.spikes - 1)
+        self._ewma = ((1 - self.ewma_alpha) * self._ewma
+                      + self.ewma_alpha * step_time_s)
+        return status
+
+    @property
+    def ewma(self) -> float:
+        return self._ewma or 0.0
+
+
+def rebalance_chunks(num_chunks: int, weights: list[float]) -> list[int]:
+    """Deal ``num_chunks`` cyclic chunks proportionally to per-device
+    speed ``weights`` (higher = faster = more chunks).  Returns the
+    device owner of each chunk — the straggler-aware replacement for
+    ``chunk j -> device j % P``."""
+    p = len(weights)
+    total = sum(weights)
+    quota = [max(1, round(num_chunks * w / total)) for w in weights]
+    # fix rounding drift
+    drift = num_chunks - sum(quota)
+    order = sorted(range(p), key=lambda i: -weights[i])
+    i = 0
+    while drift != 0:
+        d = order[i % p]
+        if drift > 0:
+            quota[d] += 1
+            drift -= 1
+        elif quota[d] > 1:
+            quota[d] -= 1
+            drift += 1
+        i += 1
+    owners: list[int] = []
+    remaining = quota[:]
+    dev = 0
+    for _ in range(num_chunks):
+        while remaining[dev % p] == 0:
+            dev += 1
+        owners.append(dev % p)
+        remaining[dev % p] -= 1
+        dev += 1
+    return owners

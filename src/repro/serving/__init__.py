@@ -1,0 +1,2 @@
+"""Batched serving: slot-based continuous batching over prefill/decode."""
+from repro.serving.engine import Request, ServeEngine  # noqa: F401

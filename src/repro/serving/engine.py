@@ -1,0 +1,124 @@
+"""Slot-based batched serving engine (continuous batching, vLLM-lite).
+
+The engine owns a fixed decode batch of ``n_slots`` sequences sharing
+one ring KV cache per layer.  Requests queue up; free slots are filled
+by running a (single-sequence) prefill whose KV is scattered into the
+slot; every engine tick runs one batched decode step for all live slots.
+Greedy sampling (argmax) keeps the demo deterministic; temperature
+sampling is a flag.
+
+This is the serving analogue of the paper's master/worker split: the
+host (master) owns admission/scheduling — the sequential remainder —
+while the SPMD decode step is the distributed parallel block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, n_slots: int, cache_len: int,
+                 eos_id: int | None = None, temperature: float = 0.0,
+                 compute_dtype=jnp.float32, seed: int = 0) -> None:
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.compute_dtype = compute_dtype
+        self.caches = model.init_cache(n_slots, cache_len,
+                                       dtype=compute_dtype)
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int64)
+        self.slot_last = np.zeros(n_slots, np.int64)
+        self.queue: list[Request] = []
+        self._rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, t, q: model.decode_step(
+                p, c, t, q, compute_dtype=compute_dtype))
+
+    # --------------------------------------------------------- admission --
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            self._prefill_into_slot(slot, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        """Run a single-sequence prefill and scatter its KV into ``slot``."""
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        cache1 = self.model.init_cache(1, self.cache_len,
+                                       dtype=self.compute_dtype)
+        logits, cache1 = self.model.prefill(
+            self.params, {"tokens": tokens}, cache1,
+            compute_dtype=self.compute_dtype)
+        self.caches = jax.tree_util.tree_map(
+            lambda full, one: full.at[:, slot].set(one[:, 0])
+            if full.ndim >= 2 and full.shape[1] == self.n_slots
+            else full.at[slot].set(one[0]),
+            self.caches, cache1)
+        tok = int(jnp.argmax(logits[0]))
+        req.output.append(tok)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        self.slot_last[slot] = tok
+
+    # ------------------------------------------------------------- tick --
+    def tick(self) -> int:
+        """Admit + one batched decode step. Returns #live slots."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return 0
+        tokens = jnp.asarray(self.slot_last, jnp.int32)
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           tokens, pos)
+        if self.temperature > 0:
+            self._rng, k = jax.random.split(self._rng)
+            nxt = jax.random.categorical(k, logits / self.temperature,
+                                         axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = np.asarray(nxt)
+        for slot in live:
+            req = self.slot_req[slot]
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self.slot_pos[slot] += 1
+            self.slot_last[slot] = tok
+            if (len(req.output) >= req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)):
+                req.done = True
+                self.slot_req[slot] = None
+        return len(live)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.tick()
+        return done

@@ -1,0 +1,56 @@
+"""Checkpointing: roundtrip, async, atomicity, GC, restart discovery."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 4), v), "b": jnp.zeros(4)},
+            "step": jnp.int32(v)}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state(3.0)
+    ck.save(10, st)
+    got = ck.restore(10, _state())
+    np.testing.assert_allclose(np.asarray(got["params"]["w"]),
+                               np.asarray(st["params"]["w"]))
+    assert ck.list_steps() == [10]
+
+
+def test_async_save_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    for s in (5, 10, 15):
+        ck.save_async(s, _state(float(s)))
+    ck.wait()
+    step, got = ck.restore_latest(_state())
+    assert step == 15
+    assert float(got["params"]["w"][0, 0]) == 15.0
+
+
+def test_gc_keeps_last_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in range(5):
+        ck.save(s, _state(float(s)))
+    assert ck.list_steps() == [3, 4]
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        ck.restore(1, {"w": jnp.zeros((8,))})
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """Atomicity: a tmp dir never counts as a checkpoint."""
+    ck = Checkpointer(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_00000007.tmp0"))
+    assert ck.list_steps() == []
+    assert ck.restore_latest(_state()) is None

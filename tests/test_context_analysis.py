@@ -1,0 +1,110 @@
+"""Context Analysis (paper §3.1.1): IN/OUT/INOUT classification and the
+affine index-map recovery, straight from traced jaxprs."""
+import jax.numpy as jnp
+import pytest
+
+from repro import omp
+from repro.core.context import ReadKind, VarClass, WriteKind, analyze_context
+from repro.core.loop import LoopNotCanonical, analyze_loop
+
+N = 16
+
+
+def _ctx(program, env):
+    loop = analyze_loop(program.start, program.stop, program.step)
+    return analyze_context(program, env, loop)
+
+
+def test_paper_figure3_classification():
+    """The paper's Fig. 3: x is IN, sum is OUT."""
+
+    @omp.parallel_for(stop=N)
+    def block(i, env):
+        x = env["x"]
+        return {"sum": omp.at(i, 4.0 / (1.0 + x * x))}
+
+    ctx = _ctx(block, {"x": jnp.float32(3.0), "sum": jnp.zeros(N)})
+    assert ctx.vars["x"].klass == VarClass.IN
+    assert ctx.vars["sum"].klass == VarClass.OUT
+    assert ctx.vars["sum"].write.kind == WriteKind.AT
+    assert (ctx.vars["sum"].write.affine.a,
+            ctx.vars["sum"].write.affine.b) == (1, 0)
+
+
+def test_inout_and_sliced_reads():
+    @omp.parallel_for(stop=N)
+    def block(i, env):
+        row = env["a"][i] * 2.0 + env["c"][i]
+        return {"c": omp.at(i, row)}
+
+    env = {"a": jnp.zeros(N), "c": jnp.zeros(N)}
+    ctx = _ctx(block, env)
+    assert ctx.vars["a"].klass == VarClass.IN
+    assert ctx.vars["a"].read.kind == ReadKind.SLICED
+    assert ctx.vars["c"].klass == VarClass.INOUT
+    assert ctx.vars["c"].read.kind == ReadKind.SLICED
+
+
+def test_affine_read_map_detected():
+    @omp.parallel_for(stop=N)
+    def block(i, env):
+        return {"y": omp.at(i, env["x"][2 * i + 1])}
+
+    env = {"x": jnp.zeros(2 * N + 2), "y": jnp.zeros(N)}
+    ctx = _ctx(block, env)
+    r = ctx.vars["x"].read
+    assert r.kind == ReadKind.SLICED
+    assert (r.affine.a, r.affine.b) == (2, 1)
+
+
+def test_whole_read_when_not_sliced():
+    @omp.parallel_for(stop=N, reduction={"s": "+"})
+    def block(i, env):
+        return {"s": omp.red(jnp.sum(env["x"]) + 0.0 * i)}
+
+    ctx = _ctx(block, {"x": jnp.zeros(N), "s": jnp.float32(0)})
+    assert ctx.vars["x"].read.kind == ReadKind.WHOLE
+    assert ctx.vars["s"].klass == VarClass.REDUCTION
+
+
+def test_unused_variable():
+    @omp.parallel_for(stop=N)
+    def block(i, env):
+        return {"y": omp.at(i, 1.0 + 0.0 * i)}
+
+    ctx = _ctx(block, {"unused": jnp.zeros(3), "y": jnp.zeros(N)})
+    assert ctx.vars["unused"].klass == VarClass.UNUSED
+
+
+def test_stencil_reads_classified():
+    """Multiple unit-stride slice maps (i-1, i, i+1) -> STENCIL (halo
+    exchange; a beyond-paper extension of the slice-transfer rule)."""
+
+    @omp.parallel_for(start=1, stop=N - 1)
+    def block(i, env):
+        v = env["x"][i - 1] + env["x"][i] + env["x"][i + 1]
+        return {"y": omp.at(i, v / 3.0)}
+
+    env = {"x": jnp.zeros(N), "y": jnp.zeros(N)}
+    ctx = _ctx(block, env)
+    r = ctx.vars["x"].read
+    assert r.kind == ReadKind.STENCIL
+    assert [(a.a, a.b) for a in r.affines] == [(1, -1), (1, 0), (1, 1)]
+
+
+def test_red_without_clause_rejected():
+    @omp.parallel_for(stop=N)
+    def block(i, env):
+        return {"s": omp.red(env["x"][i])}
+
+    with pytest.raises(LoopNotCanonical):
+        _ctx(block, {"x": jnp.zeros(N), "s": jnp.float32(0)})
+
+
+def test_put_classification():
+    @omp.parallel_for(stop=N)
+    def block(i, env):
+        return {"z": omp.put(jnp.full((4,), i, jnp.float32))}
+
+    ctx = _ctx(block, {"z": jnp.zeros(4)})
+    assert ctx.vars["z"].write.kind == WriteKind.PUT

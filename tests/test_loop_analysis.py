@@ -1,0 +1,33 @@
+"""Loop Analysis (paper §3.1.2): canonicalisation + rejection rules."""
+import pytest
+
+from repro.core.loop import LoopNotCanonical, analyze_loop
+
+
+@pytest.mark.parametrize("start,stop,step,trip", [
+    (0, 10, 1, 10),
+    (0, 10, 3, 4),
+    (3, 40, 2, 19),
+    (10, 0, -1, 10),
+    (10, 0, -3, 4),
+    (5, 5, 1, 0),
+    (7, 3, 2, 0),          # empty forward
+    (0, 1, 100, 1),
+])
+def test_trip_counts(start, stop, step, trip):
+    info = analyze_loop(start, stop, step)
+    assert info.trip_count == trip
+    # iteration_to_index covers exactly the python range
+    assert [info.iteration_to_index(k) for k in range(trip)] == \
+        list(range(start, stop, step))
+
+
+def test_zero_step_rejected():
+    with pytest.raises(LoopNotCanonical):
+        analyze_loop(0, 10, 0)
+
+
+@pytest.mark.parametrize("bad", [(0.5, 10, 1), (0, "n", 1), (0, 10, None)])
+def test_non_static_bounds_rejected(bad):
+    with pytest.raises(LoopNotCanonical):
+        analyze_loop(*bad)

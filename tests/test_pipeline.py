@@ -1,0 +1,62 @@
+"""Pipeline parallelism: correctness vs sequential stage application,
+differentiability, and the expected collective-permute schedule."""
+import numpy as np
+import pytest
+
+
+def test_pipeline_matches_sequential_and_grads(multidevice):
+    out = multidevice("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType, PartitionSpec as P
+        from repro.core.pipeline import make_pipeline, pipeline_apply
+
+        S, M, MB, D = 8, 6, 4, 16
+        mesh = jax.make_mesh((S,), ("stage",), axis_types=(AxisType.Auto,))
+        rng = np.random.default_rng(0)
+
+        def stage_fn(p, x):
+            return jnp.tanh(x @ p["w"] + p["b"])
+
+        stacked = {
+            "w": jnp.asarray(rng.normal(size=(S, D, D)).astype(np.float32))
+            * 0.3,
+            "b": jnp.asarray(rng.normal(size=(S, D)).astype(np.float32))
+            * 0.1,
+        }
+        x = jnp.asarray(rng.normal(size=(M, MB, D)).astype(np.float32))
+
+        # sequential reference: stage 0..S-1 applied in order
+        def seq(stacked, x):
+            y = x
+            for s in range(S):
+                y = stage_fn({"w": stacked["w"][s], "b": stacked["b"][s]},
+                             y)
+            return y
+
+        want = jax.vmap(lambda xm: seq(stacked, xm))(x)
+        run = make_pipeline(stage_fn, mesh, axis="stage")
+        got = run(stacked, x)
+        assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-5), \
+            np.abs(np.asarray(got) - np.asarray(want)).max()
+
+        # differentiable end to end
+        def loss(stacked):
+            return jnp.sum(run(stacked, x) ** 2)
+
+        g = jax.grad(loss)(stacked)
+        gn = sum(float(jnp.sum(jnp.abs(t)))
+                 for t in jax.tree_util.tree_leaves(g))
+        assert np.isfinite(gn) and gn > 0
+
+        # HLO: the stage hop is a collective-permute inside the tick loop
+        from repro.launch import hlo_analysis as ha
+        co = jax.jit(run).lower(
+            jax.tree_util.tree_map(
+                lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), stacked),
+            jax.ShapeDtypeStruct(x.shape, x.dtype)).compile()
+        rep = ha.analyze_hlo(co.as_text(), num_devices=S)
+        kinds = rep.by_kind()
+        assert "collective-permute" in kinds, kinds
+        print("OKPIPE", kinds)
+    """)
+    assert "OKPIPE" in out

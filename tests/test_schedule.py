@@ -1,0 +1,60 @@
+"""Workload distribution math (paper §3.1.3)."""
+import pytest
+
+from repro import omp
+from repro.core.loop import analyze_loop
+from repro.core.schedule import (
+    make_chunk_plan,
+    paper_chunk_size,
+)
+
+
+def test_paper_table2_formula():
+    """partSize = N / (size-1) / 10 — Table 2 line 4."""
+    assert paper_chunk_size(1000, 11, master_excluded=True) == 10
+    assert paper_chunk_size(1000, 11, master_excluded=False) == 9
+    # floors at 1
+    assert paper_chunk_size(5, 64, master_excluded=True) == 1
+
+
+@pytest.mark.parametrize("t,p,sched", [
+    (100, 8, omp.dynamic()),
+    (100, 8, omp.static()),
+    (100, 8, omp.guided()),
+    (100, 8, omp.static(7)),
+    (3, 8, omp.dynamic()),
+    (1, 1, omp.dynamic()),
+    (1000, 16, omp.dynamic(1)),
+])
+def test_chunk_plan_covers_iteration_space(t, p, sched):
+    loop = analyze_loop(0, t, 1)
+    plan = make_chunk_plan(loop, sched, p)
+    assert plan.padded_trip >= t
+    assert plan.num_chunks % p == 0
+    assert plan.local_chunks * p == plan.num_chunks
+    # every iteration owned by exactly one device, cyclically
+    owners = [plan.owner_of_iteration(k) for k in range(t)]
+    assert all(0 <= o < p for o in owners)
+    # chunk j -> device j % p
+    for k in range(t):
+        assert owners[k] == (k // plan.chunk) % p
+
+
+def test_static_is_one_block_per_device():
+    loop = analyze_loop(0, 64, 1)
+    plan = make_chunk_plan(loop, omp.static(), 8)
+    assert plan.chunk == 8
+    assert plan.local_chunks == 1
+
+
+def test_dynamic_overdecomposes_10x():
+    loop = analyze_loop(0, 1600, 1)
+    plan = make_chunk_plan(loop, omp.dynamic(), 8)
+    assert plan.chunk == 1600 // 8 // 10
+    assert plan.num_chunks >= 80
+
+
+def test_owner_of_last_iteration():
+    loop = analyze_loop(0, 100, 1)
+    plan = make_chunk_plan(loop, omp.dynamic(), 8)
+    assert plan.owner_of_last_iteration() == plan.owner_of_iteration(99)

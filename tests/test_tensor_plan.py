@@ -1,0 +1,65 @@
+"""Tensor planner: divisibility-aware first-fit mesh-axis assignment."""
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tensor_plan as tp
+
+
+def _plan(zero3=False):
+    return tp.make_train_plan(("data", "model"), (16, 16), zero3=zero3)
+
+
+def test_tp_shards_heads_and_ff():
+    plan = _plan()
+    assert plan.spec((8192, 64, 128),
+                     (tp.D_MODEL, tp.HEADS, tp.HEAD_DIM)) == P(None, "model")
+    assert plan.spec((8192, 49152), (tp.D_MODEL, tp.D_FF)) == \
+        P(None, "model")
+
+
+def test_divisibility_fallback_replicates():
+    plan = _plan()
+    # GQA kv=8 cannot shard over 16-way model axis
+    assert plan.spec((8192, 8, 128),
+                     (tp.D_MODEL, tp.KV_HEADS, tp.HEAD_DIM)) == P()
+    # 60 experts cannot shard over 16
+    spec = plan.spec((60, 2048, 1408),
+                     (tp.EXPERTS, tp.D_MODEL, tp.D_EXPERT))
+    assert spec[0] is None
+
+
+def test_each_mesh_axis_used_once():
+    plan = _plan(zero3=True)
+    spec = plan.spec((128, 7168, 4864),
+                     (tp.EXPERTS, tp.D_MODEL, tp.D_EXPERT))
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat.extend(s if isinstance(s, tuple) else (s,))
+    assert len(flat) == len(set(flat))
+    # experts -> model, d_model -> data (zero3)
+    assert spec == P("model", "data")
+
+
+def test_batch_uses_dp_axes():
+    plan = tp.make_train_plan(("pod", "data", "model"), (2, 16, 16))
+    spec = plan.spec((256, 4096), (tp.BATCH, None))
+    assert spec == P(("pod", "data"))
+
+
+def test_serve_plan_seq_sharding():
+    plan = tp.make_serve_plan(("data", "model"), (16, 16), shard_seq=True)
+    spec = plan.spec((1, 524288, 8, 128),
+                     (tp.BATCH, tp.SEQ_KV, tp.KV_HEADS, tp.HEAD_DIM))
+    # long-context KV shards the sequence over every available axis
+    assert spec[1] == ("data", "model")
+
+
+def test_serve_plan_2d_expert_sharding():
+    plan = tp.make_serve_plan(("data", "model"), (16, 16), shard_seq=True)
+    spec = plan.spec((16, 8192, 24576),
+                     (tp.EXPERTS, tp.D_MODEL, tp.D_EXPERT))
+    # expert weights shard 2D: experts over model, d_model over data
+    assert spec[0] == "model"
+    assert spec[1] in ("data", ("data",))
+    used = [s for s in spec if s is not None]
+    assert len(used) >= 2
