@@ -91,13 +91,13 @@ def run_polybench_lowering_compare(out_dir: str = "results/perf"):
     gemm and 2mm kernels over 8 ranks."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AxisType
 
     from benchmarks.polybench import make_2mm, make_gemm
     from repro import omp
+    from repro.compat import make_mesh
     from repro.launch import hlo_analysis as ha
 
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     results = {}
     for make in (make_gemm, make_2mm):
         k = make()

@@ -1,0 +1,172 @@
+"""Region-fusion benchmark: multi-loop chains, fused vs per-loop staging.
+
+The acceptance experiment for the ParallelRegion subsystem
+(EXPERIMENTS.md §Perf-C): on ≥2-loop chains, count the collective ops
+and per-chip wire bytes in the optimized SPMD HLO for
+
+* ``region_fused``   — ``omp.region_to_mpi`` (one shard_map, residency
+  planner elides inter-loop gather→rebroadcast round trips),
+* ``staged_coll``    — the same loops transformed one at a time with the
+  collective lowering (``fuse=False``),
+* ``staged_mw``      — per-loop master/worker staging, the paper's
+  pattern (all traffic through rank 0's links).
+
+Chains (polybench-style):
+* ``jacobi_chain``  — fdtd-ish: two pointwise sweeps + a reduction; all
+  handoffs layout-compatible (full elision),
+* ``stencil_chain`` — jacobi-2d row stencil consuming a produced array
+  (forced minimal reshard),
+* ``norm_chain``    — map → reduce → serial glue → map (mixed).
+
+This script must see 8 virtual devices, so it forces XLA_FLAGS *before*
+importing jax — run it directly (``python benchmarks/region_chains.py``)
+or through ``benchmarks/run.py`` (which subprocesses it).  Wall-clock on
+forced host devices is NOT a cluster measurement; the op/byte counts
+are the backend-independent result.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+jax.config.update("jax_platforms", "cpu")
+
+RANKS = 8
+
+
+def make_jacobi_chain(n=4096):
+    """Two pointwise sweeps + reduction — every handoff elidable."""
+    from repro import omp
+
+    @omp.parallel_for(stop=n, name="sweep1")
+    def sweep1(i, env):
+        return {"u": omp.at(i, env["a"][i] * 0.5 + 1.0)}
+
+    @omp.parallel_for(stop=n, name="sweep2")
+    def sweep2(i, env):
+        return {"v": omp.at(i, env["u"][i] * env["u"][i])}
+
+    @omp.parallel_for(stop=n, reduction={"norm": "+"}, name="norm")
+    def norm(i, env):
+        return {"norm": omp.red(env["v"][i])}
+
+    env = {"a": jnp.arange(n, dtype=jnp.float32),
+           "u": jnp.zeros(n, jnp.float32), "v": jnp.zeros(n, jnp.float32),
+           "norm": jnp.float32(0)}
+    return omp.region(sweep1, sweep2, norm, name="jacobi_chain"), env
+
+
+def make_stencil_chain(n=2048):
+    """Produce u, then consume it through a 3-point row stencil — the
+    stencil window forces one minimal reshard instead of residency."""
+    from repro import omp
+
+    @omp.parallel_for(stop=n, name="fill")
+    def fill(i, env):
+        return {"u": omp.at(i, env["a"][i] + 1.0)}
+
+    @omp.parallel_for(start=1, stop=n - 1, name="smooth")
+    def smooth(i, env):
+        v = (env["u"][i - 1] + env["u"][i] + env["u"][i + 1]) / 3.0
+        return {"w": omp.at(i, v)}
+
+    env = {"a": jnp.arange(n, dtype=jnp.float32),
+           "u": jnp.zeros(n, jnp.float32), "w": jnp.zeros(n, jnp.float32)}
+    return omp.region(fill, smooth, name="stencil_chain"), env
+
+
+def make_norm_chain(n=4096):
+    """map → reduce → serial glue (scale factor) → map."""
+    from repro import omp
+
+    @omp.parallel_for(stop=n, name="square")
+    def square(i, env):
+        return {"sq": omp.at(i, env["x"][i] * env["x"][i])}
+
+    @omp.parallel_for(stop=n, reduction={"ss": "+"}, name="sumsq")
+    def sumsq(i, env):
+        return {"ss": omp.red(env["sq"][i])}
+
+    glue = omp.serial(
+        lambda env: {"scale": 1.0 / jnp.sqrt(env["ss"] + 1e-6)[None]},
+        reads=("ss",), name="rsqrt")
+
+    @omp.parallel_for(stop=n, name="normalize")
+    def normalize(i, env):
+        return {"y": omp.at(i, env["x"][i] * env["scale"][0])}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32) * 1e-3,
+           "sq": jnp.zeros(n, jnp.float32), "ss": jnp.float32(0),
+           "scale": jnp.zeros(1, jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    return omp.region(square, sumsq, glue, normalize, name="norm_chain"), env
+
+
+def _timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench_chain(make):
+    from repro import omp
+    from repro.compat import make_mesh
+    from repro.launch import hlo_analysis as ha
+
+    mesh = make_mesh((RANKS,), ("data",))
+    reg, env = make()
+    ref = reg(env)
+    avals = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in env.items()}
+
+    variants = [
+        ("region_fused", omp.region_to_mpi(reg, mesh, env_like=env)),
+        ("staged_coll", omp.region_to_mpi(reg, mesh, fuse=False)),
+        ("staged_mw", omp.region_to_mpi(reg, mesh,
+                                        lowering="master_worker")),
+    ]
+    rows = []
+    for vname, prog in variants:
+        jitted = jax.jit(lambda e, prog=prog: prog(e))
+        got = jitted(env)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=1e-3, atol=1e-3)
+        co = jitted.lower(avals).compile()
+        rep = ha.analyze_hlo(co.as_text(), num_devices=RANKS)
+        n_ops = sum(c.multiplier for c in rep.collectives)
+        us = _timeit(jitted, env)
+        extra = ""
+        if vname == "region_fused":
+            extra = (f";elided={prog.plan.n_elided}"
+                     f";reshards={prog.plan.n_reshards}")
+        rows.append((f"region_{reg.name}_{vname}", us,
+                     f"collective_ops={n_ops}"
+                     f";wire_bytes={int(rep.total_wire_bytes)}{extra}"))
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for make in (make_jacobi_chain, make_stencil_chain, make_norm_chain):
+        for name, us, derived in bench_chain(make):
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -58,13 +58,11 @@ def _projected_speedup(programs, env, ranks=64, flops_time_us=None):
 
 
 def bench_polybench():
-    from jax.sharding import AxisType
-
     from benchmarks.polybench import ALL_KERNELS
     from repro import omp
+    from repro.compat import make_mesh
 
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_mesh((len(jax.devices()),), ("data",))
 
     for make in ALL_KERNELS:
         k = make()
@@ -129,6 +127,39 @@ def bench_polybench():
         _row(f"polybench_{k.name}_mpi", us_mpi,
              f"proj_speedup64_vs_seq={proj:.1f};overhead_vs_omp="
              f"{us_mpi / us_omp:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Region fusion (EXPERIMENTS.md §Perf-C)
+# ---------------------------------------------------------------------------
+
+
+def bench_region():
+    """Multi-loop chains: fused region vs per-loop staging.  Runs in a
+    subprocess because the comparison needs 8 virtual devices while this
+    process already initialised jax on the single real one."""
+    import os
+    import subprocess
+    import sys
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(here), "src")
+    env.pop("XLA_FLAGS", None)  # region_chains forces its own device count
+    try:
+        proc = subprocess.run(
+            [sys.executable, os.path.join(here, "region_chains.py")],
+            capture_output=True, text=True, env=env, timeout=560,
+        )
+    except subprocess.TimeoutExpired:
+        print("region_chains,0.0,failed:timeout", flush=True)
+        return
+    if proc.returncode != 0:
+        print(f"region_chains,0.0,failed:{proc.stderr[-200:]!r}", flush=True)
+        return
+    for line in proc.stdout.splitlines():
+        if line.startswith("region_"):
+            print(line, flush=True)
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +229,7 @@ def bench_lm_steps():
 def main() -> None:
     print("name,us_per_call,derived")
     bench_polybench()
+    bench_region()
     bench_kernels()
     bench_lm_steps()
 

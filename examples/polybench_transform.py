@@ -14,13 +14,13 @@ import sys
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))  # for benchmarks.*
 
 from benchmarks.polybench import make_gemm
 from repro import omp
+from repro.compat import make_mesh
 from repro.core.plan import make_plan
 from repro.core.report import _comm_summary, render_plan
 
@@ -61,8 +61,7 @@ def main() -> None:
     print(render_plan(p_col))
 
     # execute both and verify against the shared-memory reference
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_mesh((len(jax.devices()),), ("data",))
     ref = gemm(env)
     out = omp.to_mpi(gemm, mesh)(env)
     np.testing.assert_allclose(np.asarray(out["C"]), np.asarray(ref["C"]),

@@ -11,9 +11,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro import omp
+from repro.compat import make_mesh
 
 N = 1000
 
@@ -42,8 +42,7 @@ def main() -> None:
     print(f"OpenMP reference:   pi ~= {float(ref['total']):.6f}")
 
     # 2) the OMP2MPI transformation
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_mesh((len(jax.devices()),), ("data",))
     d1 = omp.to_mpi(block1, mesh, env_like=env)
     d2 = omp.to_mpi(block2, mesh, env_like=block1(env))
 

@@ -8,6 +8,8 @@ The paper's compiler pipeline, stage by stage:
 * :mod:`repro.core.schedule`  — chunking math (§3.1.3),
 * :mod:`repro.core.plan`      — Workload Distribution decisions (§3.1.3),
 * :mod:`repro.core.transform` — codegen to shard_map programs (§3.1.3–4),
+* :mod:`repro.core.region`    — whole-program ParallelRegion transformation
+  with inter-loop residency planning (beyond-paper §3.1.4 extension),
 * :mod:`repro.core.reduction` — reduction clause lowering,
 * :mod:`repro.core.report`    — the "generated code" view (Tables 2/3).
 """

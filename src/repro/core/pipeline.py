@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(stage_fn, stage_params, x_micro, *, axis: str,
                    num_stages: int, checkpoint: bool = True):
@@ -94,9 +96,8 @@ def make_pipeline(stage_fn, mesh: Mesh, *, axis: str,
             jax.tree_util.tree_map(lambda _: P(axis), stacked_params),
             P(),
         )
-        out = jax.shard_map(
+        out = shard_map(
             inner, mesh=mesh, in_specs=specs_in, out_specs=P(axis),
-            check_vma=False,
         )(stacked_params, x_micro)
         return out[-1]                           # last stage's emissions
 

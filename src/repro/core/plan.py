@@ -200,15 +200,19 @@ def make_plan(
         if info.read.kind == ReadKind.WHOLE:
             in_strategy = "replicate"
         elif info.read.kind == ReadKind.SLICED:
-            eligible = (
-                shard_inputs
-                and lowering == "collective"
-                and read_map is not None
-                and read_map.is_identity
-                and info.shape
-                and info.shape[0] == t
-            )
-            in_strategy = "shard" if eligible else "replicate"
+            in_strategy = "replicate"
+            if (shard_inputs and lowering == "collective"
+                    and read_map is not None and info.shape):
+                if read_map.is_identity and info.shape[0] == t:
+                    in_strategy = "shard"
+                elif (read_map.a == 1 and read_map.b >= 0
+                      and read_map.b + t <= info.shape[0]):
+                    # aligned unit-stride read x[k+b]: sharded slab with
+                    # a degenerate (b, b) halo window — each chunk gets
+                    # exactly the rows it reads (beyond-paper; enables
+                    # inter-loop residency for partial-cover chains)
+                    in_strategy = "shard_halo"
+                    halo = (read_map.b, read_map.b)
         elif info.read.kind == ReadKind.STENCIL:
             kmaps = [KAffine.from_iter_affine(a, loop)
                      for a in info.read.affines]

@@ -213,3 +213,112 @@ def parallel_for(
         )
 
     return wrap
+
+
+# ---------------------------------------------------------------------------
+# ParallelRegion — whole-program container (beyond-paper §3.1.4 extension)
+# ---------------------------------------------------------------------------
+
+
+class SerialStage:
+    """Pure serial glue between parallel blocks.
+
+    ``fn(env) -> {name: new_value}`` computes whole-array updates with no
+    parallel loop (the code *between* two ``#pragma omp parallel for``
+    blocks in the source program).  Inside the distributed region it runs
+    redundantly on every rank over replicated buffers.
+
+    ``reads`` restricts which environment buffers the function consumes;
+    the region planner only materialises (gathers) the slab-resident
+    buffers it names.  ``reads=None`` (default) is conservative: every
+    buffer is materialised before the stage runs.
+    """
+
+    def __init__(self, fn: Callable[[Mapping[str, Any]], Mapping[str, Any]],
+                 *, reads: tuple[str, ...] | None = None,
+                 name: str | None = None) -> None:
+        self.fn = fn
+        self.reads = tuple(reads) if reads is not None else None
+        self.name = name or getattr(fn, "__name__", "serial")
+
+    def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
+        out = dict(env)
+        out.update(self.fn(env))
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        r = f", reads={list(self.reads)}" if self.reads is not None else ""
+        return f"SerialStage({self.name}{r})"
+
+
+def serial(fn: Callable | None = None, *,
+           reads: tuple[str, ...] | None = None,
+           name: str | None = None):
+    """Wrap serial glue for a :class:`ParallelRegion` (decorator or call)."""
+    if fn is not None:
+        return SerialStage(fn, reads=reads, name=name)
+
+    def wrap(f: Callable) -> SerialStage:
+        return SerialStage(f, reads=reads, name=name)
+
+    return wrap
+
+
+class ParallelRegion:
+    """An ordered whole-program sequence of :class:`ParallelFor` blocks
+    and optional :class:`SerialStage` glue.
+
+    The paper transforms each ``parallel for`` in isolation, so data
+    returns to rank 0 between consecutive loops (its Fig. 1b bottleneck).
+    A region is transformed *as a whole* by :func:`repro.omp.region_to_mpi`:
+    the inter-loop residency planner keeps arrays distributed across
+    stage boundaries whenever the producing loop's OUT layout matches the
+    consuming loop's IN requirement.
+
+    Calling the region executes the shared-memory ("OpenMP") semantics:
+    each stage's reference executor in program order — the oracle the
+    fused transformation is validated against.
+    """
+
+    def __init__(self, stages, *, name: str | None = None) -> None:
+        stages = tuple(stages)
+        if not stages:
+            raise ValueError("ParallelRegion needs at least one stage")
+        for s in stages:
+            if not isinstance(s, (ParallelFor, SerialStage)):
+                raise TypeError(
+                    "region stages must be ParallelFor or SerialStage, got "
+                    f"{type(s).__name__}"
+                )
+        if not any(isinstance(s, ParallelFor) for s in stages):
+            raise ValueError("ParallelRegion needs at least one ParallelFor")
+        self.stages = stages
+        self.name = name or "region"
+
+    @property
+    def loops(self) -> tuple[ParallelFor, ...]:
+        return tuple(s for s in self.stages if isinstance(s, ParallelFor))
+
+    def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
+        out = dict(env)
+        for stage in self.stages:
+            out = stage(out)
+        return out
+
+    def __iter__(self):
+        return iter(self.stages)
+
+    def __len__(self) -> int:
+        return len(self.stages)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        inner = ", ".join(s.name for s in self.stages)
+        return f"ParallelRegion({self.name}: [{inner}])"
+
+
+def region(*stages, name: str | None = None) -> ParallelRegion:
+    """Build a :class:`ParallelRegion`; accepts stages or one iterable."""
+    if len(stages) == 1 and not isinstance(stages[0],
+                                           (ParallelFor, SerialStage)):
+        stages = tuple(stages[0])
+    return ParallelRegion(stages, name=name)

@@ -1,0 +1,547 @@
+"""Whole-program OMP→MPI transformation with inter-loop residency planning.
+
+OMP2MPI transforms each ``parallel for`` in isolation: every block stages
+its IN buffers out of rank 0's shared memory and returns every OUT slab
+back to it (paper Fig. 1b).  For a *chain* of blocks that means a
+gather→rebroadcast round trip between consecutive loops even when the
+next loop immediately re-distributes the same array the same way — the
+communication bottleneck follow-up systems (OMP2HMPP, MPI-rical) attack
+by reasoning across statement boundaries.
+
+This module transforms a :class:`~repro.core.pragma.ParallelRegion` as a
+whole:
+
+* :func:`plan_region` — the **inter-loop residency planner**.  It walks
+  the stage sequence, tracking the layout of every environment buffer
+  (``replicated`` or chunk-cyclic ``slab``), and matches each loop's OUT
+  layout (from its :class:`~repro.core.plan.DistPlan`) against the next
+  loop's IN requirement:
+
+  - compatible layouts → the buffer **stays resident** in its slab; the
+    gather→rebroadcast round trip is elided entirely;
+  - incompatible layouts → a single minimal resharding collective (an
+    ``all_gather``) materialises the buffer, replacing the staged
+    master round trip;
+  - serial glue stages run redundantly on every rank over replicated
+    buffers (only their declared reads are materialised).
+
+* :func:`region_to_mpi` — the transformation entry point.  The
+  ``"collective"`` lowering fuses the whole region into **one**
+  ``shard_map`` so resident buffers never leave their device; the
+  ``"master_worker"`` lowering (and ``fuse=False``) keeps the paper's
+  per-loop staging as the measurable baseline (EXPERIMENTS.md §Perf-C).
+
+Residency compatibility (the layout-matching rule): loop A's write slab
+holds row ``base + j*c + r`` at (chunk ``j``, lane ``r``); loop B can
+consume it in place iff both loops share the chunk geometry
+``(c, P, n_loc, padded)``, cover the same trip count, and B's per-
+iteration read map equals A's write map (``x[k + base]`` both sides —
+identity or aligned unit-stride).  Strided, stencil and whole-array reads
+fall back to the resharding collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import pragma, reduction as red_mod
+from repro.core import transform as tf
+from repro.core.loop import LoopNotCanonical
+from repro.core.plan import DistPlan, make_plan
+from repro.core.schedule import ChunkPlan
+from repro.core.tensor_plan import slab_spec
+
+REPLICATED = "repl"
+
+
+# ---------------------------------------------------------------------------
+# Layout state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabLayout:
+    """Chunk-cyclic residency of one buffer between stages.
+
+    Device ``d`` holds stacks of shape ``(local_chunks, chunk, *rest)``;
+    (local chunk ``q``, lane ``r``) is global row
+    ``base + (q * num_devices + d) * chunk + r``.  ``cover`` rows
+    ``[base, base + cover)`` are authoritative; ``has_prior`` marks a
+    partial cover whose remaining rows live in a replicated prior copy.
+    """
+
+    chunk: int
+    num_devices: int
+    local_chunks: int
+    padded_trip: int
+    base: int
+    cover: int
+    has_prior: bool
+
+    @classmethod
+    def of(cls, plan: DistPlan, *, base: int, has_prior: bool) -> "SlabLayout":
+        ch = plan.chunks
+        return cls(ch.chunk, ch.num_devices, ch.local_chunks,
+                   ch.padded_trip, base, plan.loop.trip_count, has_prior)
+
+    def geometry_matches(self, ch: ChunkPlan) -> bool:
+        return (self.chunk == ch.chunk
+                and self.num_devices == ch.num_devices
+                and self.local_chunks == ch.local_chunks
+                and self.padded_trip == ch.padded_trip)
+
+
+@dataclasses.dataclass
+class StageExec:
+    """One stage of the fused execution schedule."""
+
+    name: str
+    kind: str                          # "loop" | "serial"
+    stage: Any                         # ParallelFor | SerialStage
+    plan: DistPlan | None
+    gathers: tuple[str, ...]           # keys resharded (materialised) first
+    feeds: dict[str, str]              # sharded-in key -> "resident"|"slice"
+    serial_writes: tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class RegionPlan:
+    """Output of the inter-loop residency planner."""
+
+    name: str
+    axis: str
+    num_devices: int
+    stages: list[StageExec]
+    env_keys: list[str]                # region input keys
+    touched_keys: list[str]            # keys (re)written by some stage
+    final_layout: dict[str, Any]       # touched key -> REPLICATED | SlabLayout
+    n_elided: int                      # resident handoffs (round trips saved)
+    n_reshards: int                    # minimal collectives inserted
+    log: list[str]                     # human-readable transition journal
+
+    @property
+    def loop_plans(self) -> list[DistPlan]:
+        return [s.plan for s in self.stages if s.plan is not None]
+
+
+def _aval_of(x: Any) -> jax.ShapeDtypeStruct:
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    arr = jnp.asarray(x)
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def _nbytes(aval: jax.ShapeDtypeStruct) -> int:
+    n = 1
+    for s in aval.shape:
+        n *= s
+    return int(n) * jnp.dtype(aval.dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# The residency planner
+# ---------------------------------------------------------------------------
+
+
+def plan_region(
+    region: pragma.ParallelRegion,
+    env: Mapping[str, Any],
+    num_devices: int,
+    *,
+    axis: str = "data",
+) -> RegionPlan:
+    """Match each loop's OUT layout against the next loop's IN needs."""
+    env_shapes = {k: _aval_of(v) for k, v in env.items()}
+    state: dict[str, Any] = {k: REPLICATED for k in env_shapes}
+    touched: set[str] = set()
+    stages: list[StageExec] = []
+    n_elided = n_reshards = 0
+    log: list[str] = []
+
+    for stage in region.stages:
+        if isinstance(stage, pragma.SerialStage):
+            reads = (stage.reads if stage.reads is not None
+                     else tuple(env_shapes))
+            gathers = tuple(
+                k for k in reads if isinstance(state.get(k), SlabLayout))
+            out_sh = jax.eval_shape(stage.fn, env_shapes)
+            if not isinstance(out_sh, dict):
+                raise LoopNotCanonical(
+                    f"serial stage {stage.name!r} must return a dict of "
+                    "whole-array updates"
+                )
+            for k in gathers:
+                n_reshards += 1
+                log.append(f"{stage.name}: reshard {k!r} "
+                           f"(~{_nbytes(env_shapes[k])} B all-gather; "
+                           "serial glue reads it)")
+                state[k] = REPLICATED
+            for k, v in out_sh.items():
+                env_shapes[k] = jax.ShapeDtypeStruct(v.shape, v.dtype)
+                state[k] = REPLICATED
+                touched.add(k)
+            stages.append(StageExec(
+                name=stage.name, kind="serial", stage=stage, plan=None,
+                gathers=gathers, feeds={}, serial_writes=tuple(out_sh)))
+            continue
+
+        plan = make_plan(stage, env_shapes, num_devices, axis=axis,
+                         lowering="collective", shard_inputs=True)
+        t = plan.loop.trip_count
+        if t == 0:
+            # Zero-trip loop: the executor only folds reduction
+            # identities (mirroring single-block ``_execute``); no other
+            # buffer moves, so no layout changes either.
+            gathers0: list[str] = []
+            for key, dec in plan.vars.items():
+                if dec.out_strategy != "reduce":
+                    continue
+                if isinstance(state.get(key), SlabLayout):
+                    gathers0.append(key)
+                    n_reshards += 1
+                    state[key] = REPLICATED
+                    log.append(
+                        f"{stage.name}: reshard {key!r} "
+                        f"(~{_nbytes(env_shapes[key])} B all-gather; "
+                        "zero-trip reduction folds the prior value)")
+                state[key] = REPLICATED
+                touched.add(key)
+                if key not in env_shapes:
+                    info = plan.context.vars[key]
+                    env_shapes[key] = jax.ShapeDtypeStruct(
+                        info.write.value_shape, info.write.value_dtype)
+            stages.append(StageExec(
+                name=stage.name, kind="loop", stage=stage, plan=plan,
+                gathers=tuple(gathers0), feeds={}))
+            continue
+        gathers: list[str] = []
+        feeds: dict[str, str] = {}
+        for key, dec in plan.vars.items():
+            st = state.get(key, REPLICATED)
+            is_slab = isinstance(st, SlabLayout)
+            write_b = dec.write_map.b if dec.write_map is not None else None
+
+            resident = False
+            if is_slab and st.geometry_matches(plan.chunks) and st.cover == t:
+                if dec.in_strategy == "shard":
+                    resident = st.base == 0
+                elif dec.in_strategy == "shard_halo":
+                    resident = dec.halo == (st.base, st.base)
+
+            # Out-merges that consume the pre-stage value need it
+            # replicated — except a partial write replacing a slab of the
+            # identical interval, whose prior chains through.
+            interval_same = (is_slab and dec.out_strategy == "partial"
+                             and st.base == write_b and st.cover == t)
+            prior_repl = (
+                dec.out_strategy == "scatter"
+                or (dec.out_strategy == "partial" and not interval_same)
+                or (dec.out_strategy == "reduce" and key in state)
+            )
+            if prior_repl:
+                resident = False
+
+            if resident:
+                feeds[key] = "resident"
+                n_elided += 1
+                log.append(
+                    f"{stage.name}: {key!r} stays RESIDENT "
+                    f"(elides ~{2 * _nbytes(env_shapes[key])} B "
+                    "gather+redistribute round trip)")
+            else:
+                needs_repl = (
+                    prior_repl
+                    or dec.in_strategy in ("shard", "shard_halo", "replicate")
+                )
+                if is_slab and needs_repl:
+                    gathers.append(key)
+                    n_reshards += 1
+                    state[key] = REPLICATED
+                    log.append(
+                        f"{stage.name}: reshard {key!r} "
+                        f"(~{_nbytes(env_shapes[key])} B all-gather; "
+                        f"layout incompatible with {dec.in_strategy!r} in / "
+                        f"{dec.out_strategy!r} out)")
+                if dec.in_strategy in ("shard", "shard_halo"):
+                    feeds[key] = "slice"
+
+            if dec.out_strategy == "identity":
+                state[key] = SlabLayout.of(plan, base=0, has_prior=False)
+                touched.add(key)
+            elif dec.out_strategy == "partial":
+                state[key] = SlabLayout.of(plan, base=write_b, has_prior=True)
+                touched.add(key)
+            elif dec.out_strategy in ("scatter", "put", "reduce"):
+                state[key] = REPLICATED
+                touched.add(key)
+                if key not in env_shapes:     # fresh reduction output
+                    info = plan.context.vars[key]
+                    env_shapes[key] = jax.ShapeDtypeStruct(
+                        info.write.value_shape, info.write.value_dtype)
+
+        stages.append(StageExec(
+            name=stage.name, kind="loop", stage=stage, plan=plan,
+            gathers=tuple(gathers), feeds=feeds))
+
+    final_layout = {k: state[k] for k in sorted(touched)}
+    return RegionPlan(
+        name=region.name, axis=axis, num_devices=num_devices,
+        stages=stages, env_keys=list(env.keys()),
+        touched_keys=sorted(touched), final_layout=final_layout,
+        n_elided=n_elided, n_reshards=n_reshards, log=log,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Distributed region program
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistributedRegion:
+    """The generated whole-program "MPI" code for a parallel region."""
+
+    region: pragma.ParallelRegion
+    mesh: Mesh
+    plan: RegionPlan | None
+    axis: str = "data"
+    lowering: str = "collective"
+    fuse: bool = True
+    shard_inputs: bool = False          # per-loop fallback path only
+    unroll_chunks: bool = False
+    paper_master_excluded: bool | None = None
+
+    def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
+        env = {k: jnp.asarray(v) for k, v in env.items()}
+        if self.lowering != "collective" or not self.fuse:
+            return self._run_staged(env)
+        if self.plan is None:
+            self.plan = plan_region(
+                self.region, env, self.mesh.shape[self.axis], axis=self.axis)
+        return _execute_region(self, env)
+
+    def _run_staged(self, env: dict) -> dict:
+        """Paper-faithful baseline: each loop transformed in isolation
+        (data returns to replicated form between stages)."""
+        out = dict(env)
+        for stage in self.region.stages:
+            if isinstance(stage, pragma.SerialStage):
+                out = stage(out)
+            else:
+                out = tf.to_mpi(
+                    stage, self.mesh, axis=self.axis, lowering=self.lowering,
+                    shard_inputs=self.shard_inputs,
+                    unroll_chunks=self.unroll_chunks,
+                    paper_master_excluded=self.paper_master_excluded,
+                )(out)
+        return out
+
+    def report(self) -> str:
+        from repro.core import report as report_mod
+
+        if self.plan is None:
+            raise ValueError(
+                "call the region (or pass env_like to region_to_mpi) to "
+                "build the residency plan before asking for a report")
+        return report_mod.render_region(self.plan)
+
+
+def region_to_mpi(
+    region: pragma.ParallelRegion,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    lowering: str = "collective",
+    fuse: bool = True,
+    shard_inputs: bool = False,
+    unroll_chunks: bool = False,
+    env_like: Mapping[str, Any] | None = None,
+    paper_master_excluded: bool | None = None,
+) -> DistributedRegion:
+    """Transform a whole :class:`~repro.core.pragma.ParallelRegion`.
+
+    ``lowering="collective"`` + ``fuse=True`` (default) emits ONE fused
+    shard_map with inter-loop residency; ``fuse=False`` or
+    ``lowering="master_worker"`` stage each loop in isolation — the
+    paper's per-loop pattern, kept as the measurable baseline.
+    """
+    if isinstance(region, pragma.ParallelFor):
+        region = pragma.ParallelRegion((region,))
+    if axis not in mesh.axis_names:
+        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
+    if lowering not in ("collective", "master_worker"):
+        raise ValueError(f"unknown lowering {lowering!r}")
+    if lowering == "master_worker":
+        fuse = False
+    plan = None
+    if env_like is not None and lowering == "collective" and fuse:
+        plan = plan_region(region, env_like, mesh.shape[axis], axis=axis)
+    return DistributedRegion(
+        region=region, mesh=mesh, plan=plan, axis=axis, lowering=lowering,
+        fuse=fuse, shard_inputs=shard_inputs, unroll_chunks=unroll_chunks,
+        paper_master_excluded=paper_master_excluded,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused execution (one shard_map for the whole region)
+# ---------------------------------------------------------------------------
+
+
+def _local_slabs(x, plan: DistPlan, dec, d):
+    """Slice THIS device's chunk slabs out of a replicated buffer —
+    pure local indexing, the fused analogue of the jit-level
+    ``_pad_reshape``/``_halo_slabs`` staging."""
+    ch = plan.chunks
+    b_min, b_max = dec.halo if dec.halo is not None else (0, 0)
+    width = ch.chunk + (b_max - b_min)
+    base = (jnp.arange(ch.local_chunks, dtype=jnp.int32)[:, None]
+            * ch.num_devices + d) * ch.chunk
+    rows = base + b_min + jnp.arange(width, dtype=jnp.int32)[None, :]
+    rows = jnp.clip(rows, 0, x.shape[0] - 1)
+    return jnp.take(x, rows, axis=0)        # (n_loc, width, *rest)
+
+
+def _execute_region(dr: DistributedRegion, env: dict) -> dict:
+    rp = dr.plan
+    mesh, axis = dr.mesh, rp.axis
+    env_dtypes = {k: v.dtype for k, v in env.items()}
+
+    # exit layout is static — build specs up front
+    slab_out = {k: lay for k, lay in rp.final_layout.items()
+                if isinstance(lay, SlabLayout)}
+    repl_out = [k for k, lay in rp.final_layout.items() if lay == REPLICATED]
+    prior_out = [k for k, lay in slab_out.items() if lay.has_prior]
+
+    def device_fn(env_all):
+        d = jax.lax.axis_index(axis)
+        st: dict[str, tuple] = {k: ("repl", v) for k, v in env_all.items()}
+
+        def materialize(key):
+            tag = st[key][0]
+            if tag == "repl":
+                return st[key][1]
+            _, stacks, base, cover, prior, dtype = st[key]
+            g = jax.lax.all_gather(stacks, axis, axis=1, tiled=False)
+            flat = g.reshape((-1,) + g.shape[3:])[:cover].astype(dtype)
+            if prior is None:
+                full = flat
+            else:
+                full = jax.lax.dynamic_update_slice_in_dim(
+                    prior, flat, base, 0)
+            st[key] = ("repl", full)
+            return full
+
+        for se in rp.stages:
+            for k in se.gathers:
+                materialize(k)
+
+            if se.kind == "serial":
+                env_full = {k: e[1] for k, e in st.items() if e[0] == "repl"}
+                upd = se.stage.fn(env_full)
+                for k, v in upd.items():
+                    st[k] = ("repl", jnp.asarray(v))
+                continue
+
+            plan = se.plan
+            t = plan.loop.trip_count
+            if t == 0:
+                for key, dec in plan.vars.items():
+                    if dec.out_strategy == "reduce":
+                        rop = red_mod.get_reduction(dec.reduction_op)
+                        info = plan.context.vars[key]
+                        val = red_mod.identity_like(
+                            rop, jnp.zeros(info.write.value_shape,
+                                           info.write.value_dtype))
+                        if key in st:
+                            val = rop.pairwise(materialize(key), val)
+                        st[key] = ("repl", val)
+                continue
+
+            env_in: dict[str, Any] = {}
+            slab_stacks: dict[str, Any] = {}
+            for key in plan.context.env_keys:
+                dec = plan.vars[key]
+                if dec.in_strategy in ("shard", "shard_halo"):
+                    if se.feeds[key] == "resident":
+                        slab_stacks[key] = st[key][1]
+                    else:
+                        slab_stacks[key] = _local_slabs(
+                            st[key][1], plan, dec, d)
+                elif dec.in_strategy == "replicate":
+                    env_in[key] = st[key][1]
+
+            carry, ys = tf._run_local_chunks(
+                plan, se.stage, env_in, slab_stacks, d, dr.unroll_chunks)
+
+            for key, dec in plan.vars.items():
+                info = plan.context.vars[key]
+                if dec.out_strategy == "identity":
+                    st[key] = ("slab", ys[key], 0, t, None, info.dtype)
+                elif dec.out_strategy == "partial":
+                    b = dec.write_map.b
+                    prev = st.get(key)
+                    if (prev is not None and prev[0] == "slab"
+                            and prev[2] == b and prev[3] == t):
+                        prior = prev[4]     # same interval: chain the prior
+                    else:
+                        prior = st[key][1]  # replicated (planner enforced)
+                    st[key] = ("slab", ys[key], b, t, prior, info.dtype)
+                elif dec.out_strategy == "scatter":
+                    buf, mask = carry[key]
+                    summed = jax.lax.psum(buf, axis)
+                    m = jax.lax.psum(mask.astype(jnp.int32), axis)
+                    prior = st[key][1]
+                    vmask = (m > 0).reshape((-1,) + (1,) * (summed.ndim - 1))
+                    st[key] = ("repl", jnp.where(
+                        vmask, summed.astype(prior.dtype), prior))
+                elif dec.out_strategy == "put":
+                    j_star = (t - 1) // plan.chunks.chunk
+                    owner = j_star % plan.chunks.num_devices
+                    val = jnp.where(d == owner, carry[key],
+                                    jnp.zeros_like(carry[key]))
+                    st[key] = ("repl", jax.lax.psum(val, axis))
+                elif dec.out_strategy == "reduce":
+                    rop = red_mod.get_reduction(dec.reduction_op)
+                    val = red_mod.cross_device_combine(rop, carry[key], axis)
+                    if key in st:
+                        val = rop.pairwise(st[key][1], val)
+                    st[key] = ("repl", val)
+
+        outs_repl = {k: st[k][1] for k in repl_out}
+        outs_slab = {k: st[k][1][:, None] for k in slab_out}
+        outs_prior = {k: st[k][4] for k in prior_out}
+        return outs_repl, outs_slab, outs_prior
+
+    in_specs = ({k: P() for k in env},)
+    out_specs = (
+        {k: P() for k in repl_out},
+        {k: slab_spec(axis) for k in slab_out},
+        {k: P() for k in prior_out},
+    )
+    if not rp.touched_keys:
+        return dict(env)
+
+    outs_repl, outs_slab, outs_prior = shard_map(
+        device_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    )(env)
+
+    # --- reassembly at the jit level (layout, not messages) ---------------
+    result = dict(env)
+    for key in repl_out:
+        result[key] = outs_repl[key]
+    for key, lay in slab_out.items():
+        g = outs_slab[key]                       # (n_loc, P, c, *rest)
+        flat = g.reshape((-1,) + g.shape[3:])[:lay.cover]
+        flat = flat.astype(env_dtypes.get(key, flat.dtype))
+        if lay.has_prior:
+            result[key] = jax.lax.dynamic_update_slice_in_dim(
+                outs_prior[key], flat, lay.base, 0)
+        else:
+            result[key] = flat
+    return result

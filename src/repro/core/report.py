@@ -78,6 +78,68 @@ def render_plan(plan: DistPlan) -> str:
     return "\n".join(lines)
 
 
+def render_region(rp) -> str:
+    """Render a :class:`~repro.core.region.RegionPlan` — the whole-program
+    analogue of the per-block report: stage roster, the residency
+    planner's transition journal, and the staged-vs-fused comparison."""
+    from repro.core.region import REPLICATED, SlabLayout
+
+    lines = [
+        f"=== ParallelRegion transformation report: {rp.name} ===",
+        f"mesh axis       : {rp.axis!r} ({rp.num_devices} compute ranks)",
+        f"stages          : {len(rp.stages)} "
+        f"({sum(1 for s in rp.stages if s.kind == 'loop')} parallel loops, "
+        f"{sum(1 for s in rp.stages if s.kind == 'serial')} serial glue)",
+        "",
+        "stage roster:",
+    ]
+    for s in rp.stages:
+        if s.kind == "serial":
+            lines.append(f"  {s.name:>16s}  serial glue "
+                         f"(writes {list(s.serial_writes)})")
+        else:
+            ch = s.plan.chunks
+            lines.append(
+                f"  {s.name:>16s}  loop t={s.plan.loop.trip_count} "
+                f"chunk={ch.chunk} ({ch.num_chunks} chunks cyclic)")
+    lines.append("")
+    lines.append("inter-loop residency (the beyond-paper layout planner):")
+    if rp.log:
+        for entry in rp.log:
+            lines.append(f"  {entry}")
+    else:
+        lines.append("  (no inter-stage traffic: single loop or "
+                     "disjoint buffers)")
+    lines.append("")
+    lines.append(
+        f"residency summary: {rp.n_elided} resident handoff(s) elided, "
+        f"{rp.n_reshards} minimal reshard collective(s) inserted")
+    lines.append("")
+    lines.append("per-loop staged estimate (paper: every block round-trips "
+                 "through the master):")
+    staged_total = 0
+    for s in rp.stages:
+        if s.plan is None:
+            continue
+        _, sub = _comm_breakdown(s.plan)
+        staged_total += sub
+        lines.append(f"  {s.name:>16s}: ~{sub} B")
+    lines.append(f"  {'TOTAL':>16s}: ~{staged_total} B if each loop is "
+                 "transformed in isolation")
+    lines.append("")
+    lines.append("final buffer layouts:")
+    for key, lay in rp.final_layout.items():
+        if lay == REPLICATED:
+            lines.append(f"  {key:>16s}: replicated")
+        else:
+            assert isinstance(lay, SlabLayout)
+            lines.append(
+                f"  {key:>16s}: chunk-cyclic slab "
+                f"rows [{lay.base}, {lay.base + lay.cover}) "
+                f"(reassembled by layout at exit)")
+    return "\n".join(lines)
+
+
 def _bytes_of(shape, dtype) -> int:
     import numpy as np
 
@@ -89,6 +151,14 @@ def _bytes_of(shape, dtype) -> int:
 
 def _comm_summary(plan: DistPlan) -> list[str]:
     """Estimated bytes moved, in MPI terms (per rule in DESIGN.md §2)."""
+    lines, total = _comm_breakdown(plan)
+    lines.append(f"  {'TOTAL':>12s}: ~{total} B "
+                 f"({plan.lowering} lowering estimate)")
+    return lines
+
+
+def _comm_breakdown(plan: DistPlan) -> tuple[list[str], int]:
+    """Per-variable traffic lines plus the numeric total."""
     ch = plan.chunks
     out = []
     total = 0
@@ -135,6 +205,4 @@ def _comm_summary(plan: DistPlan) -> list[str]:
         if parts:
             out.append(f"  {key:>12s}: " + "; ".join(parts))
         total += moved
-    out.append(f"  {'TOTAL':>12s}: ~{total} B "
-               f"({plan.lowering} lowering estimate)")
-    return out
+    return out, total

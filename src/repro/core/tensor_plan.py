@@ -79,7 +79,9 @@ class TensorPlan:
                     continue
                 if size % self._axis_size(cand) != 0:
                     continue
-                assigned = cand
+                # Normalise 1-tuples to the bare axis name so specs
+                # compare equal across jax versions.
+                assigned = flat[0] if len(flat) == 1 else cand
                 used.update(flat)
                 break
             out.append(assigned)
@@ -106,6 +108,19 @@ class TensorPlan:
             is_leaf=lambda x: isinstance(x, tuple) and all(
                 isinstance(e, (str, type(None))) for e in x),
         )
+
+
+def slab_spec(mesh_axis: str) -> P:
+    """PartitionSpec of a chunk-cyclic loop slab ``(n_loc, P, c, *rest)``.
+
+    The explicit-loop planner (:mod:`repro.core.plan`) and the region
+    residency planner (:mod:`repro.core.region`) both park distributed
+    buffers in this layout: the middle dim *is* the device axis, so a
+    "chunk-distributed array" is an ordinary sharded tensor in the
+    tensor-plan vocabulary — the bridge that lets loop-level residency
+    compose with model-level sharding on one mesh.
+    """
+    return P(None, mesh_axis)
 
 
 def _dp_axes(mesh_axes: tuple[str, ...]):

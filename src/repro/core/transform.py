@@ -19,6 +19,13 @@ Two executors for a :class:`~repro.core.pragma.ParallelFor` program:
     ``collective-permute`` pairs.  It reproduces the communication shape
     of the paper's Fig. 1b (all traffic through the master's links) and
     exists as the measurable baseline for EXPERIMENTS.md §Perf-A.
+
+Both executors transform ONE block.  Whole programs (chains of blocks
+with inter-loop residency planning) go through
+:func:`repro.core.region.region_to_mpi`, which reuses this module's
+chunk-execution machinery (`_run_local_chunks`) inside a single fused
+shard_map; per-loop staging via this module is its measurable baseline
+(EXPERIMENTS.md §Perf-C).
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import pragma, reduction as red_mod
 from repro.core.context import ReadKind, VarClass, WriteKind
 from repro.core.loop import LoopNotCanonical, analyze_loop
@@ -424,9 +432,8 @@ def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
     if not out_specs:
         return dict(env)
 
-    outs = jax.shard_map(
+    outs = shard_map(
         device_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
     )(env_repl, env_slab)
 
     # --- reassembly at the jit level (layout, not messages) ---------------
@@ -596,9 +603,8 @@ def _execute_master_worker(dp: DistributedProgram, env: dict) -> dict:
     if not out_specs:
         return dict(env)
 
-    outs = jax.shard_map(
+    outs = shard_map(
         device_fn, mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
-        check_vma=False,
     )(env_all)
 
     result = dict(env)

@@ -202,6 +202,37 @@ def analyze_hlo(hlo: str, *, num_devices: int,
             md = def_re.match(line)
             if md:
                 symtab[md.group(1)] = md.group(2)
+
+        def _operand_types(arg_str):
+            """Type string per operand.  Older HLO printers inline the
+            operand type (``dot(f32[8,16]{1,0} %a, ...)``); newer ones
+            print bare names resolved through the symbol table.  Args
+            are split on top-level commas only (shapes contain commas).
+            """
+            parts, depth, cur = [], 0, []
+            for chx in arg_str:
+                if chx in "[{(":
+                    depth += 1
+                elif chx in "]})":
+                    depth -= 1
+                if chx == "," and depth == 0:
+                    parts.append("".join(cur))
+                    cur = []
+                else:
+                    cur.append(chx)
+            if cur:
+                parts.append("".join(cur))
+            types = []
+            for p in parts:
+                p = p.strip()
+                if not p:
+                    continue
+                if " " in p:                      # inline "type %name"
+                    types.append(p.rsplit(None, 1)[0])
+                else:
+                    types.append(symtab.get(p.lstrip("%"), ""))
+            return types
+
         for line in lines:
             md = def_re.match(line)
             if md is None or md.group(3) != "dot":
@@ -211,9 +242,8 @@ def analyze_hlo(hlo: str, *, num_devices: int,
             ma = dot_args_re.search(line)
             if not result_shapes or ma is None:
                 continue
-            operands = [a.strip().lstrip("%")
-                        for a in ma.group(1).split(",")]
-            lhs_type = symtab.get(operands[0], "") if operands else ""
+            op_types = _operand_types(ma.group(1))
+            lhs_type = op_types[0] if op_types else ""
             lhs_shapes = _SHAPE_RE.findall(lhs_type)
             if not lhs_shapes:
                 continue
@@ -228,8 +258,7 @@ def analyze_hlo(hlo: str, *, num_devices: int,
             for d in res_dims:
                 res_n *= d
             dot_flops += 2.0 * res_n * contract * mult
-            op_bytes = sum(_shape_bytes(symtab.get(o, ""))
-                           for o in operands)
+            op_bytes = sum(_shape_bytes(t) for t in op_types)
             dot_bytes += (_shape_bytes(result_type) + op_bytes) * mult
 
     # --- CPU float-normalization artifact ----------------------------------

@@ -8,21 +8,20 @@ the single real device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (tests, examples, smoke runs)."""
     n = len(jax.devices())
     assert n % model_parallel == 0, (n, model_parallel)
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n // model_parallel, model_parallel),
+                     ("data", "model"))

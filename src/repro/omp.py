@@ -25,16 +25,27 @@ from repro.core.pragma import (  # noqa: F401
     STATIC,
     At,
     ParallelFor,
+    ParallelRegion,
     Put,
     Red,
     Schedule,
+    SerialStage,
     at,
     dynamic,
     guided,
     parallel_for,
     put,
     red,
+    region,
+    serial,
     static,
+)
+from repro.core.region import (  # noqa: F401
+    DistributedRegion,
+    RegionPlan,
+    SlabLayout,
+    plan_region,
+    region_to_mpi,
 )
 from repro.core.schedule import (  # noqa: F401
     ChunkPlan,

@@ -1,0 +1,74 @@
+"""Minimal fallback for ``hypothesis`` (property-based testing).
+
+The container does not ship hypothesis and nothing may be pip-installed,
+so this vendors the tiny subset the suite uses: ``given``/``settings``
+plus the ``integers``/``sampled_from``/``one_of``/``none`` strategies.
+Draws are seeded (deterministic across runs) and each ``given`` test runs
+``max_examples`` sampled combinations — no shrinking, no database, but
+the same coverage intent as the real library at these example counts.
+
+``from tests._hypothesis_compat import given, settings, strategies``
+resolves to the real hypothesis when it is importable.
+"""
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis namespace
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: rng.choice(opts))
+
+        @staticmethod
+        def none():
+            return _Strategy(lambda rng: None)
+
+        @staticmethod
+        def one_of(*strats):
+            return _Strategy(lambda rng: rng.choice(strats).draw(rng))
+
+    def settings(max_examples: int = 20, **_ignored):
+        def wrap(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return wrap
+
+    def given(**strats):
+        def wrap(fn):
+            def run():
+                # settings() may be applied after given(); read the
+                # attribute off the wrapper at call time.
+                n = getattr(run, "_max_examples", 20)
+                rng = random.Random(0xA5A5)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(**drawn)
+
+            # No functools.wraps: pytest must see a zero-arg signature,
+            # not the original one (drawn args are not fixtures).
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run._max_examples = getattr(fn, "_max_examples", 20)
+            return run
+
+        return wrap

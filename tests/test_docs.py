@@ -1,0 +1,16 @@
+"""The docs baseline: required documents exist and their referenced
+file paths resolve (same check CI's `docs` job runs)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_docs_exist_and_paths_resolve():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_docs.py")],
+        capture_output=True, text=True, timeout=60,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "docs ok" in proc.stdout

@@ -38,15 +38,16 @@ def test_scan_multiplies_dot_flops():
 def test_collective_bytes_detected(multidevice):
     out = multidevice("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.launch import hlo_analysis as ha
 
-        mesh = jax.make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ("d",))
 
         def f(x):
             return jax.lax.psum(x, "d")
 
-        sm = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
+        sm = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
         co = jax.jit(sm).lower(
             jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
         rep = ha.analyze_hlo(co.as_text(), num_devices=8)

@@ -138,11 +138,12 @@ def test_tree_compression():
 def test_compressed_allreduce_matches_mean(multidevice):
     out = multidevice("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.optim import compressed_allreduce_tree
         from repro.optim.grad import init_error_feedback
 
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(8, 333)).astype(np.float32))
 
@@ -153,9 +154,9 @@ def test_compressed_allreduce_matches_mean(multidevice):
                 g, e, axis="data", num_devices=8)
             return mean["w"][None], mean["b"][None]
 
-        w, b = jax.jit(jax.shard_map(
+        w, b = jax.jit(shard_map(
             step, mesh=mesh, in_specs=P("data"),
-            out_specs=(P("data"), P("data")), check_vma=False))(x)
+            out_specs=(P("data"), P("data"))))(x)
         want_w = np.mean(np.asarray(x) * 2.0, axis=0)
         want_b = np.mean(np.asarray(x)[:, :5] - 1.0, axis=0)
         scale = np.abs(want_w).max()
@@ -165,10 +166,9 @@ def test_compressed_allreduce_matches_mean(multidevice):
             assert np.allclose(np.asarray(b)[d], want_b, atol=0.05), d
         # HLO moves int8, not fp32: wire must be ~4x below 2*S*(P-1)/P
         from repro.launch import hlo_analysis as ha
-        co = jax.jit(jax.shard_map(
+        co = jax.jit(shard_map(
             step, mesh=mesh, in_specs=P("data"),
-            out_specs=(P("data"), P("data")),
-            check_vma=False)).lower(
+            out_specs=(P("data"), P("data")))).lower(
             jax.ShapeDtypeStruct((8, 333), jnp.float32)).compile()
         rep = ha.analyze_hlo(co.as_text(), num_devices=8)
         fp32_allreduce = 2 * (333 + 5) * 4 * 7 / 8

@@ -7,11 +7,12 @@ import pytest
 def test_pipeline_matches_sequential_and_grads(multidevice):
     out = multidevice("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh
         from repro.core.pipeline import make_pipeline, pipeline_apply
 
         S, M, MB, D = 8, 6, 4, 16
-        mesh = jax.make_mesh((S,), ("stage",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((S,), ("stage",))
         rng = np.random.default_rng(0)
 
         def stage_fn(p, x):

@@ -1,0 +1,339 @@
+"""ParallelRegion: whole-program transformation with inter-loop residency.
+
+The oracle is always the per-stage shared-memory reference executed in
+sequence (``region(env)``); the fused ``region_to_mpi`` must match it on
+every chain shape: compatible-layout elision, forced reshards
+(whole-array / stencil reads), partial-cover aligned chains, serial
+glue, reduction-carrying chains, and both staged baselines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import omp
+from repro.compat import make_mesh
+
+
+def mesh1():
+    return make_mesh((1,), ("data",))
+
+
+def _close(a, b, tol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=tol, atol=tol)
+
+
+def _chain3(n=48):
+    @omp.parallel_for(stop=n, name="l1")
+    def l1(i, env):
+        return {"tmp": omp.at(i, env["x"][i] * 2.0)}
+
+    @omp.parallel_for(stop=n, name="l2")
+    def l2(i, env):
+        return {"y": omp.at(i, env["tmp"][i] + 1.0)}
+
+    @omp.parallel_for(stop=n, reduction={"tot": "+"}, name="l3")
+    def l3(i, env):
+        return {"tot": omp.red(env["y"][i])}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32), "tmp": jnp.zeros(n),
+           "y": jnp.zeros(n), "tot": jnp.float32(0)}
+    return omp.region(l1, l2, l3, name="chain3"), env
+
+
+def test_region_reference_matches_sequential_loops():
+    reg, env = _chain3()
+    seq = env
+    for stage in reg.stages:
+        seq = stage(seq)
+    ref = reg(env)
+    for k in ref:
+        _close(ref[k], seq[k])
+
+
+def test_region_elides_compatible_layouts():
+    reg, env = _chain3()
+    ref = reg(env)
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    out = dist(env)
+    for k in ref:
+        _close(out[k], ref[k])
+    # tmp: l1 identity-out -> l2 identity-in; y: l2 -> l3 reduce loop
+    assert dist.plan.n_elided == 2, dist.plan.log
+    assert dist.plan.n_reshards == 0, dist.plan.log
+    feeds = {s.name: s.feeds for s in dist.plan.stages}
+    assert feeds["l2"]["tmp"] == "resident"
+    assert feeds["l3"]["y"] == "resident"
+
+
+def test_region_forced_reshard_whole_read():
+    n = 40
+
+    @omp.parallel_for(stop=n, name="w1")
+    def w1(i, env):
+        return {"tmp": omp.at(i, env["x"][i] * 3.0)}
+
+    @omp.parallel_for(stop=n, name="w2")
+    def w2(i, env):
+        # whole-array read of tmp: the slab cannot be consumed in place
+        return {"y": omp.at(i, env["tmp"][i] + jnp.sum(env["tmp"]))}
+
+    reg = omp.region(w1, w2, name="whole_read")
+    env = {"x": jnp.arange(n, dtype=jnp.float32), "tmp": jnp.zeros(n),
+           "y": jnp.zeros(n)}
+    ref = reg(env)
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    out = dist(env)
+    for k in ref:
+        _close(out[k], ref[k], tol=1e-4)
+    assert dist.plan.n_reshards == 1, dist.plan.log
+    assert dist.plan.n_elided == 0, dist.plan.log
+
+
+def test_region_forced_reshard_stencil_read():
+    n = 33
+
+    @omp.parallel_for(stop=n, name="s1")
+    def s1(i, env):
+        return {"u": omp.at(i, env["x"][i] + 1.0)}
+
+    @omp.parallel_for(start=1, stop=n - 1, name="s2")
+    def s2(i, env):
+        v = (env["u"][i - 1] + env["u"][i] + env["u"][i + 1]) / 3.0
+        return {"y": omp.at(i, v)}
+
+    reg = omp.region(s1, s2, name="stencil_chain")
+    env = {"x": jnp.arange(n, dtype=jnp.float32), "u": jnp.zeros(n),
+           "y": jnp.zeros(n)}
+    ref = reg(env)
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    out = dist(env)
+    for k in ref:
+        _close(out[k], ref[k])
+    # different trip counts + stencil window -> one minimal reshard
+    assert dist.plan.n_reshards == 1, dist.plan.log
+
+
+def test_region_partial_cover_aligned_chain():
+    """Interior writes u[i+1] chained into aligned reads u[i+1] stay
+    resident (the generalised unit-stride residency rule)."""
+    m = 41
+
+    @omp.parallel_for(stop=m - 2, name="p1")
+    def p1(i, env):
+        return {"u": omp.at(i + 1, env["a"][i + 1] * 3.0)}
+
+    @omp.parallel_for(stop=m - 2, name="p2")
+    def p2(i, env):
+        return {"v": omp.at(i + 1, env["u"][i + 1] - 1.0)}
+
+    reg = omp.region(p1, p2, name="partial_chain")
+    env = {"a": jnp.arange(m, dtype=jnp.float32),
+           "u": -jnp.ones(m, jnp.float32), "v": -jnp.ones(m, jnp.float32)}
+    ref = reg(env)
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    out = dist(env)
+    for k in ref:
+        _close(out[k], ref[k])
+    assert dist.plan.n_elided == 1, dist.plan.log
+    # untouched boundary rows come from the prior copy
+    assert float(out["u"][0]) == -1.0 and float(out["u"][m - 1]) == -1.0
+
+
+def test_region_serial_glue_stage():
+    n = 24
+
+    @omp.parallel_for(stop=n, name="g1")
+    def g1(i, env):
+        return {"tmp": omp.at(i, env["x"][i] * 2.0)}
+
+    glue = omp.serial(lambda env: {"bias": env["bias"] * 0.5},
+                      reads=("bias",), name="halve")
+
+    @omp.parallel_for(stop=n, name="g2")
+    def g2(i, env):
+        return {"y": omp.at(i, env["tmp"][i] + env["bias"][0])}
+
+    reg = omp.region(g1, glue, g2, name="glued")
+    env = {"x": jnp.arange(n, dtype=jnp.float32), "tmp": jnp.zeros(n),
+           "y": jnp.zeros(n), "bias": jnp.full((1,), 3.0, jnp.float32)}
+    ref = reg(env)
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    out = dist(env)
+    for k in ref:
+        _close(out[k], ref[k])
+    # glue only reads 'bias' (replicated): tmp stays resident across it
+    assert dist.plan.n_elided == 1, dist.plan.log
+    assert dist.plan.n_reshards == 0, dist.plan.log
+
+
+def test_region_reduction_carrying_chain():
+    """Reductions folding a resident buffer, plus the env-merge rule."""
+    n = 30
+
+    @omp.parallel_for(stop=n, name="r1")
+    def r1(i, env):
+        return {"y": omp.at(i, env["x"][i] * env["x"][i])}
+
+    @omp.parallel_for(stop=n, reduction={"s": "+"}, name="r2")
+    def r2(i, env):
+        return {"s": omp.red(env["y"][i])}
+
+    @omp.parallel_for(stop=n, reduction={"m": "max"}, name="r3")
+    def r3(i, env):
+        return {"m": omp.red(env["y"][i])}
+
+    reg = omp.region(r1, r2, r3, name="red_chain")
+    env = {"x": jnp.arange(n, dtype=jnp.float32), "y": jnp.zeros(n),
+           "s": jnp.float32(100.0), "m": jnp.float32(-1.0)}
+    ref = reg(env)
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    out = dist(env)
+    for k in ref:
+        _close(out[k], ref[k], tol=1e-4)
+    # y is consumed resident by BOTH reduction loops (no write between)
+    assert dist.plan.n_elided == 2, dist.plan.log
+    assert float(out["s"]) == pytest.approx(float(ref["s"]), rel=1e-5)
+
+
+def test_region_scatter_and_put_stages():
+    n = 10
+
+    @omp.parallel_for(stop=n, name="c1")
+    def c1(i, env):
+        return {"z": omp.at(3 * i + 2, env["x"][i])}
+
+    @omp.parallel_for(stop=n, name="c2")
+    def c2(i, env):
+        return {"w": omp.put(jnp.full((4,), i, jnp.float32))}
+
+    reg = omp.region(c1, c2, name="scatter_put")
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "z": -jnp.ones(40, jnp.float32), "w": jnp.zeros(4, jnp.float32)}
+    ref = reg(env)
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    out = dist(env)
+    for k in ref:
+        _close(out[k], ref[k])
+    assert float(out["w"][0]) == n - 1
+
+
+def test_region_zero_trip_loop():
+    """A stop=0 loop inside a region is a no-op for writes and an
+    identity fold for reductions (matches single-block to_mpi)."""
+    n = 8
+
+    @omp.parallel_for(stop=0, name="z0")
+    def z0(i, env):
+        return {"y": omp.at(i, env["x"][i]), "s": omp.red(env["x"][i])}
+
+    @omp.parallel_for(stop=n, name="z1")
+    def z1(i, env):
+        return {"y": omp.at(i, env["x"][i] + env["s"])}
+
+    z0.reduction = {"s": "+"}
+    reg = omp.region(z0, z1, name="zero_trip")
+    env = {"x": jnp.arange(n, dtype=jnp.float32), "y": jnp.zeros(n),
+           "s": jnp.float32(7.0)}
+    ref = reg(env)
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    out = dist(env)
+    for k in ref:
+        _close(out[k], ref[k])
+    assert float(out["s"]) == 7.0
+
+
+def test_region_staged_fallbacks_match():
+    reg, env = _chain3()
+    ref = reg(env)
+    out = omp.region_to_mpi(reg, mesh1(), fuse=False)(env)
+    for k in ref:
+        _close(out[k], ref[k])
+
+
+def test_region_report_mentions_residency():
+    reg, env = _chain3()
+    dist = omp.region_to_mpi(reg, mesh1(), env_like=env)
+    text = dist.report()
+    for needle in ("ParallelRegion", "RESIDENT", "residency summary",
+                   "stage roster", "chunk-cyclic"):
+        assert needle in text, needle
+
+
+def test_region_rejects_bad_stages():
+    with pytest.raises(ValueError):
+        omp.region(name="empty")
+    with pytest.raises(TypeError):
+        omp.region(lambda e: e)
+    with pytest.raises(ValueError):
+        omp.region(omp.serial(lambda e: {}, name="only_glue"))
+
+
+def test_region_single_parallel_for_wrapped():
+    n = 16
+
+    @omp.parallel_for(stop=n, name="solo")
+    def solo(i, env):
+        return {"y": omp.at(i, env["x"][i] + 5.0)}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32), "y": jnp.zeros(n)}
+    out = omp.region_to_mpi(solo, mesh1())(env)
+    _close(out["y"], solo(env)["y"])
+
+
+def test_region_eight_devices_and_traffic(multidevice):
+    """Real 8-device run: fused region matches the reference and moves
+    strictly fewer collective ops + wire bytes than the paper's per-loop
+    master/worker staging (the acceptance experiment of EXPERIMENTS.md
+    §Perf-C)."""
+    out = multidevice("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import omp
+        from repro.compat import make_mesh
+        from repro.launch import hlo_analysis as ha
+
+        mesh = make_mesh((8,), ("data",))
+        n = 53
+
+        @omp.parallel_for(stop=n, name="l1")
+        def l1(i, env):
+            return {"tmp": omp.at(i, env["x"][i] * 2.0)}
+
+        @omp.parallel_for(stop=n, name="l2")
+        def l2(i, env):
+            return {"y": omp.at(i, env["tmp"][i] + 1.0)}
+
+        @omp.parallel_for(stop=n, reduction={"tot": "+"}, name="l3")
+        def l3(i, env):
+            return {"tot": omp.red(env["y"][i])}
+
+        reg = omp.region(l1, l2, l3, name="chain")
+        env = {"x": jnp.arange(n, dtype=jnp.float32),
+               "tmp": jnp.zeros(n), "y": jnp.zeros(n),
+               "tot": jnp.float32(0)}
+        ref = reg(env)
+        dist = omp.region_to_mpi(reg, mesh, env_like=env)
+        got = dist(env)
+        for k in ref:
+            assert np.allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                               atol=1e-4), k
+        assert dist.plan.n_elided == 2, dist.plan.log
+
+        avals = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                 for k, v in env.items()}
+
+        def cost(fn):
+            co = jax.jit(lambda e: fn(e)).lower(avals).compile()
+            rep = ha.analyze_hlo(co.as_text(), num_devices=8)
+            return (sum(c.multiplier for c in rep.collectives),
+                    rep.total_wire_bytes)
+
+        f_ops, f_bytes = cost(dist)
+        m_ops, m_bytes = cost(
+            omp.region_to_mpi(reg, mesh, lowering="master_worker"))
+        assert f_ops < m_ops, (f_ops, m_ops)
+        assert f_bytes < m_bytes, (f_bytes, m_bytes)
+        print("OKREGION8", f_ops, m_ops, f_bytes, m_bytes)
+    """)
+    assert "OKREGION8" in out

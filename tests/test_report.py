@@ -1,9 +1,9 @@
 """The report module renders the paper's Tables-2/3-style artifact."""
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 from repro import omp
+from repro.compat import make_mesh
 
 
 def test_report_contains_paper_concepts():
@@ -13,7 +13,7 @@ def test_report_contains_paper_concepts():
         v = env["x"][i] * 2.0
         return {"y": omp.at(i, v), "total": omp.red(v)}
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     env = {"x": jnp.zeros(40), "y": jnp.zeros(40), "total": jnp.float32(0)}
     dist = omp.to_mpi(block, mesh, env_like=env)
     text = dist.report()

@@ -9,14 +9,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import AxisType
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro import omp
+from repro.compat import make_mesh
 
 
 def mesh1():
-    return jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    return make_mesh((1,), ("data",))
 
 
 def _close(a, b, tol=1e-5):
@@ -184,10 +184,10 @@ def test_property_reductions(t, op, seed):
 def test_eight_device_both_lowerings(multidevice):
     out = multidevice("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro import omp
+        from repro.compat import make_mesh
 
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         N = 53
         x = jnp.asarray(rng.normal(size=N).astype(np.float32))
@@ -232,10 +232,10 @@ def test_stencil_halo_sharded_inputs():
 def test_stencil_halo_eight_devices(multidevice):
     out = multidevice("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro import omp
+        from repro.compat import make_mesh
 
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         n = 67
         rng = np.random.default_rng(7)
         x = jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))

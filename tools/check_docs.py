@@ -1,0 +1,57 @@
+"""Docs consistency check (CI `docs` job).
+
+Asserts the documentation set exists and that every repo-relative file
+path referenced from it resolves — so the architecture map, the paper
+map and the experiment protocols cannot silently rot as the tree moves.
+
+Run: python tools/check_docs.py  (from the repo root or anywhere)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+REQUIRED = [
+    "README.md",
+    "EXPERIMENTS.md",
+    "docs/PAPER_MAP.md",
+    "ROADMAP.md",
+    "CHANGES.md",
+]
+
+# repo-relative path tokens inside backticks, e.g. `src/repro/core/plan.py`
+# (optionally followed by ::symbol or (symbols) which we strip)
+_PATH_RE = re.compile(
+    r"`((?:src|tests|benchmarks|examples|docs|tools|\.github)"
+    r"/[\w./\-]+\.(?:py|md|yml))")
+
+
+def main() -> int:
+    missing_docs = [p for p in REQUIRED
+                    if not os.path.isfile(os.path.join(REPO, p))]
+    if missing_docs:
+        print(f"MISSING DOCS: {missing_docs}")
+        return 1
+
+    bad: list[tuple[str, str]] = []
+    checked = 0
+    for doc in REQUIRED:
+        text = open(os.path.join(REPO, doc), encoding="utf-8").read()
+        for ref in set(_PATH_RE.findall(text)):
+            checked += 1
+            if not os.path.isfile(os.path.join(REPO, ref)):
+                bad.append((doc, ref))
+    if bad:
+        for doc, ref in sorted(bad):
+            print(f"BROKEN PATH: {doc} -> {ref}")
+        return 1
+    print(f"docs ok: {len(REQUIRED)} documents, "
+          f"{checked} referenced paths resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
