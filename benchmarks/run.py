@@ -134,10 +134,11 @@ def bench_polybench():
 # ---------------------------------------------------------------------------
 
 
-def bench_region():
-    """Multi-loop chains: fused region vs per-loop staging.  Runs in a
-    subprocess because the comparison needs 8 virtual devices while this
-    process already initialised jax on the single real one."""
+def _bench_subprocess(script: str, prefix: str, row_name: str):
+    """Run a multi-device benchmark script in a subprocess (it forces its
+    own 8 virtual devices while this process already initialised jax on
+    the single real one) and relay its CSV rows.  ``row_name`` labels
+    the failure row when the script dies."""
     import os
     import subprocess
     import sys
@@ -145,21 +146,32 @@ def bench_region():
     here = os.path.dirname(os.path.abspath(__file__))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(here), "src")
-    env.pop("XLA_FLAGS", None)  # region_chains forces its own device count
+    env.pop("XLA_FLAGS", None)  # the script forces its own device count
     try:
         proc = subprocess.run(
-            [sys.executable, os.path.join(here, "region_chains.py")],
+            [sys.executable, os.path.join(here, script)],
             capture_output=True, text=True, env=env, timeout=560,
         )
     except subprocess.TimeoutExpired:
-        print("region_chains,0.0,failed:timeout", flush=True)
+        print(f"{row_name},0.0,failed:timeout", flush=True)
         return
     if proc.returncode != 0:
-        print(f"region_chains,0.0,failed:{proc.stderr[-200:]!r}", flush=True)
+        print(f"{row_name},0.0,failed:{proc.stderr[-200:]!r}", flush=True)
         return
     for line in proc.stdout.splitlines():
-        if line.startswith("region_"):
+        if line.startswith(prefix):
             print(line, flush=True)
+
+
+def bench_region():
+    """Multi-loop chains: fused region vs per-loop staging."""
+    _bench_subprocess("region_chains.py", "region_", "region_chains")
+
+
+def bench_stencil_halo():
+    """Cost-modeled halo boundaries vs the all-gather rule
+    (EXPERIMENTS.md §Perf-D)."""
+    _bench_subprocess("stencil_halo.py", "stencil_halo_", "stencil_halo")
 
 
 # ---------------------------------------------------------------------------
@@ -230,6 +242,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_polybench()
     bench_region()
+    bench_stencil_halo()
     bench_kernels()
     bench_lm_steps()
 

@@ -1,0 +1,159 @@
+"""Halo-exchange benchmark: cost-modeled boundaries vs the all-gather rule.
+
+The acceptance experiment for the communication planner
+(EXPERIMENTS.md §Perf-D): on a 3-loop ping-pong stencil chain (the
+paper's Jacobi/heat shape, §4 — each sweep consumes the previous
+sweep's array through a 3-point window and overwrites the one before
+it), compare the optimized-HLO collective traffic of
+
+* ``fused_halo``    — ``omp.region_to_mpi(..., comm="auto")``: the
+  planner lowers each stencil boundary to neighbor ``ppermute`` ring
+  shifts moving O(halo · chunks) rows,
+* ``fused_gather``  — ``comm="gather"``: the PR 1 rule (one
+  ``all_gather`` per incompatible boundary, O(N) rows),
+* ``staged_mw``     — per-loop master/worker staging, the paper's
+  pattern.
+
+The headline number is **boundary wire bytes**: the exit materialisation
+of the final slabs is identical in both fused variants (XLA gathers the
+region outputs at the jit boundary either way), so
+
+``boundary_gather = all_gather_bytes(fused_gather) - all_gather_bytes(fused_halo)``
+``boundary_halo   = collective_permute_bytes(fused_halo)``
+
+and the acceptance bar is ``boundary_gather >= 5 * boundary_halo``.
+
+The ping-pong shape matters: a chain that *returns* every intermediate
+still pays one gather per buffer at exit, so halo planning only changes
+*where* that gather happens; when intermediates are overwritten (every
+real stencil iteration), the boundary traffic is the whole story.
+
+This script must see 8 virtual devices, so it forces XLA_FLAGS *before*
+importing jax — run it directly (``python benchmarks/stencil_halo.py``)
+or through ``benchmarks/run.py``.  Wall-clock on forced host devices is
+NOT a cluster measurement; the byte counts are the backend-independent
+result.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+jax.config.update("jax_platforms", "cpu")
+
+RANKS = 8
+N = 4096
+CHUNK = 64
+
+
+def make_heat_chain(n=N, c=CHUNK):
+    """3 ping-pong Jacobi sweeps: a -> b -> a -> b (each sweep reads the
+    previous array through a 3-point window and overwrites the other)."""
+    from repro import omp
+
+    def sweep(src, dst, name):
+        @omp.parallel_for(start=1, stop=n - 1, schedule=omp.static(c),
+                          name=name)
+        def body(i, env):
+            v = 0.25 * (env[src][i - 1] + 2.0 * env[src][i]
+                        + env[src][i + 1])
+            return {dst: omp.at(i, v)}
+        return body
+
+    reg = omp.region(
+        sweep("a", "b", "sweep1"),
+        sweep("b", "a", "sweep2"),
+        sweep("a", "b", "sweep3"),
+        name="heat3",
+    )
+    env = {"a": jnp.sin(jnp.arange(n, dtype=jnp.float32) * 0.01),
+           "b": jnp.zeros(n, jnp.float32)}
+    return reg, env
+
+
+def _timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def measure():
+    from repro import omp
+    from repro.compat import make_mesh
+    from repro.launch import hlo_analysis as ha
+
+    mesh = make_mesh((RANKS,), ("data",))
+    reg, env = make_heat_chain()
+    ref = reg(env)
+    avals = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in env.items()}
+
+    variants = [
+        ("fused_halo", omp.region_to_mpi(reg, mesh, env_like=env,
+                                         comm="auto")),
+        ("fused_gather", omp.region_to_mpi(reg, mesh, env_like=env,
+                                           comm="gather")),
+        ("staged_mw", omp.region_to_mpi(reg, mesh,
+                                        lowering="master_worker")),
+    ]
+    rows, kinds = [], {}
+    for vname, prog in variants:
+        jitted = jax.jit(lambda e, prog=prog: prog(e))
+        got = jitted(env)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=1e-4, atol=1e-4)
+        co = jitted.lower(avals).compile()
+        rep = ha.analyze_hlo(co.as_text(), num_devices=RANKS)
+        by_kind = rep.by_kind()
+        kinds[vname] = by_kind
+        n_ops = sum(c.multiplier for c in rep.collectives)
+        us = _timeit(jitted, env)
+        extra = ""
+        if prog.plan is not None:
+            ops = ",".join(bc.op for bc in prog.plan.comms)
+            extra = (f";halo={prog.plan.n_halo}"
+                     f";reshards={prog.plan.n_reshards}"
+                     f";boundary_ops={ops}"
+                     f";modeled_wire={prog.plan.planned_wire_bytes}")
+        rows.append((f"stencil_halo_{vname}", us,
+                     f"collective_ops={n_ops}"
+                     f";wire_bytes={int(rep.total_wire_bytes)}{extra}"))
+
+    boundary_halo = int(kinds["fused_halo"].get("collective-permute", 0))
+    boundary_gather = int(kinds["fused_gather"].get("all-gather", 0)
+                          - kinds["fused_halo"].get("all-gather", 0))
+    ratio = boundary_gather / max(1, boundary_halo)
+    rows.append(("stencil_halo_boundary", 0.0,
+                 f"halo_bytes={boundary_halo}"
+                 f";gather_bytes={boundary_gather}"
+                 f";ratio={ratio:.1f}"))
+    return rows, ratio
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    rows, ratio = measure()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    assert ratio >= 5.0, (
+        f"halo boundaries must move >=5x fewer wire bytes (got {ratio:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

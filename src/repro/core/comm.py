@@ -1,0 +1,431 @@
+"""Cost-modeled communication planning for inter-loop boundaries.
+
+The paper's §3.1.4 moves whole arrays through rank 0 at every loop
+boundary (``MPI_Send``/``MPI_Recv`` of each block's data); the region
+residency planner (:mod:`repro.core.region`) already reduces that to one
+``all_gather`` per layout-incompatible boundary.  This module goes one
+step further, in the direction real MPI ports take (MPI-rical, arXiv
+2305.09438: stencil codes overwhelmingly use *neighbor* sends) and picks
+the boundary operator by an explicit cost model rather than a fixed rule
+(the OMP2HMPP idea, arXiv 1506.02833): every slab→consumer handoff is
+lowered to the cheapest of four strategies
+
+==============  =========================================================
+op              when / what moves
+==============  =========================================================
+``resident``    producer OUT layout equals consumer IN layout: nothing
+                moves (the residency elision of PR 1)
+``halo``        consumer is a chunk-sharded (possibly stencil) read whose
+                window only leaks ``L`` rows into the previous chunk and
+                ``R`` rows into the next one: two ``jax.lax.ppermute``
+                ring shifts move O(halo · chunks) rows instead of O(N)
+``all_gather``  chunk-sharded consumer whose window cannot be served by
+                neighbor shifts (or where the shifts would move more
+                bytes than the gather): one ring ``all_gather``, then a
+                local re-slice
+``replicate``   the consumer semantically needs the full buffer on every
+                rank (whole-array read, serial glue, out-merge priors):
+                the ``all_gather`` is forced, not chosen
+==============  =========================================================
+
+Each decision is a :class:`BoundaryComm` carrying a :class:`CommCost`
+(op, payload bytes per device, modeled total wire bytes, ring hop count)
+plus the costs of the rejected alternatives — the transformation report
+(:func:`repro.core.report.render_region`) prints them per boundary.
+
+The halo *emitter* (:func:`halo_exchange`) and the shared slab-window
+geometry (:func:`window_rows` / :func:`device_window_rows`) live here so
+the per-loop staging path (:mod:`repro.core.transform`) and the fused
+region path build byte-identical read windows.
+
+Window geometry (all in k-space, ``0 <= b_min <= b_max`` guaranteed by
+:mod:`repro.core.plan` eligibility): consumer chunk ``j`` reads positions
+``[j*c + b_min, (j+1)*c - 1 + b_max]``.  Relative to a producer slab
+based at ``base`` the offsets are ``delta = b - base``; rows below the
+chunk's own slab rows come from the *previous* chunk's tail
+(``L = max(0, -delta_min)`` rows), rows above from the *next* chunk's
+head (``R = max(0, delta_max)`` rows).  Rows outside the slab's cover
+``[0, cover)`` are patched from the replicated prior copy (partial-write
+producers keep one — the MPI analogue is the unmodified boundary rows
+every rank already owns).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Slab residency layout (moved here from region.py so the cost model and
+# the residency planner share one definition; region re-exports it).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabLayout:
+    """Chunk-cyclic residency of one buffer between stages.
+
+    Device ``d`` holds stacks of shape ``(local_chunks, chunk, *rest)``;
+    (local chunk ``q``, lane ``r``) is global row
+    ``base + (q * num_devices + d) * chunk + r``.  ``cover`` rows
+    ``[base, base + cover)`` are authoritative; ``has_prior`` marks a
+    partial cover whose remaining rows live in a replicated prior copy.
+    """
+
+    chunk: int
+    num_devices: int
+    local_chunks: int
+    padded_trip: int
+    base: int
+    cover: int
+    has_prior: bool
+
+    @classmethod
+    def of(cls, plan, *, base: int, has_prior: bool) -> "SlabLayout":
+        ch = plan.chunks
+        return cls(ch.chunk, ch.num_devices, ch.local_chunks,
+                   ch.padded_trip, base, plan.loop.trip_count, has_prior)
+
+    def geometry_matches(self, ch) -> bool:
+        return (self.chunk == ch.chunk
+                and self.num_devices == ch.num_devices
+                and self.local_chunks == ch.local_chunks
+                and self.padded_trip == ch.padded_trip)
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+RESIDENT = "resident"
+HALO = "halo"
+ALL_GATHER = "all_gather"
+REPLICATE = "replicate"
+
+COMM_MODES = ("auto", "gather")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommCost:
+    """Bytes-on-the-wire model of one boundary lowering.
+
+    ``payload_bytes`` — bytes materialised at each receiving device;
+    ``wire_bytes``    — modeled total bytes crossing device links
+                        (the quantity the HLO collective counter audits);
+    ``hops``          — ring ``ppermute`` shifts emitted (0 for resident
+                        and for the collective ops).
+    """
+
+    op: str
+    payload_bytes: int
+    wire_bytes: int
+    hops: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryComm:
+    """The planned communication at one stage←buffer boundary."""
+
+    stage: str
+    key: str
+    op: str
+    cost: CommCost
+    alternatives: Mapping[str, CommCost]
+    reason: str
+    shift: tuple[int, int] | None = None   # (delta_min, delta_max) for halo
+
+    def describe(self) -> str:
+        s = (f"{self.stage} <- {self.key!r}: {self.op}"
+             f" (payload ~{self.cost.payload_bytes} B/device,"
+             f" wire ~{self.cost.wire_bytes} B, hops={self.cost.hops})")
+        alts = [f"{op}~{c.wire_bytes} B"
+                for op, c in sorted(self.alternatives.items())
+                if op != self.op]
+        if alts:
+            s += " [rejected: " + ", ".join(alts) + "]"
+        return s
+
+
+def row_bytes(aval) -> int:
+    """Bytes of one leading-dim row of ``aval``."""
+    n = 1
+    for s in aval.shape[1:]:
+        n *= s
+    return int(n) * jnp.dtype(aval.dtype).itemsize
+
+
+def full_bytes(aval) -> int:
+    """Bytes of the whole ``aval`` buffer."""
+    n = 1
+    for s in aval.shape:
+        n *= s
+    return int(n) * jnp.dtype(aval.dtype).itemsize
+
+
+def gather_cost(layout: SlabLayout, aval, *, op: str = ALL_GATHER) -> CommCost:
+    """Ring all_gather of the slab stacks, then a local re-slice: every
+    device receives the ``(P-1)/P`` of the padded slab it lacks."""
+    row = row_bytes(aval)
+    p = layout.num_devices
+    wire = layout.padded_trip * row * (p - 1)
+    return CommCost(op=op, payload_bytes=full_bytes(aval), wire_bytes=wire,
+                    hops=0)
+
+
+def halo_cost(layout: SlabLayout, aval, delta_min: int,
+              delta_max: int) -> CommCost:
+    """Neighbor ring shifts: each chunk sends ``L`` tail rows left-to-
+    right and ``R`` head rows right-to-left (self-sends counted too —
+    on one device the gather is free and wins the comparison)."""
+    row = row_bytes(aval)
+    left = max(0, -delta_min)
+    right = max(0, delta_max)
+    num_chunks = layout.local_chunks * layout.num_devices
+    wire = num_chunks * (left + right) * row
+    return CommCost(
+        op=HALO,
+        payload_bytes=layout.local_chunks * (left + right) * row,
+        wire_bytes=wire,
+        hops=(1 if left else 0) + (1 if right else 0),
+    )
+
+
+def plan_boundary(
+    *,
+    stage: str,
+    key: str,
+    layout: SlabLayout,
+    chunks,
+    trip: int,
+    aval,
+    in_strategy: str,
+    halo: tuple[int, int] | None,
+    needs_replicated: bool,
+    mode: str = "auto",
+) -> BoundaryComm:
+    """Pick the cheapest feasible lowering for one slab→consumer boundary.
+
+    ``needs_replicated`` marks consumers that must see the full buffer
+    (whole-array reads, out-merge priors): the gather is then forced and
+    reported as ``replicate``.  ``mode="gather"`` disables the halo
+    strategy — the PR 1 baseline, kept for measurement.
+    """
+    if mode not in COMM_MODES:
+        raise ValueError(f"unknown comm mode {mode!r}; expected {COMM_MODES}")
+    g_op = REPLICATE if needs_replicated else ALL_GATHER
+    g_cost = gather_cost(layout, aval, op=g_op)
+    alternatives: dict[str, CommCost] = {g_op: g_cost}
+
+    if needs_replicated or in_strategy not in ("shard", "shard_halo"):
+        return BoundaryComm(
+            stage=stage, key=key, op=REPLICATE,
+            cost=dataclasses.replace(g_cost, op=REPLICATE),
+            alternatives=alternatives,
+            reason="consumer needs the full buffer on every rank",
+        )
+
+    b_min, b_max = halo if halo is not None else (0, 0)
+    if chunks is None or not layout.geometry_matches(chunks):
+        return BoundaryComm(
+            stage=stage, key=key, op=ALL_GATHER, cost=g_cost,
+            alternatives=alternatives,
+            reason="chunk geometry differs between producer and consumer",
+        )
+
+    delta_min = b_min - layout.base
+    delta_max = b_max - layout.base
+
+    if delta_min == 0 and delta_max == 0 and layout.cover == trip:
+        cost = CommCost(op=RESIDENT, payload_bytes=0, wire_bytes=0, hops=0)
+        alternatives[RESIDENT] = cost
+        return BoundaryComm(
+            stage=stage, key=key, op=RESIDENT, cost=cost,
+            alternatives=alternatives,
+            reason="producer OUT layout equals consumer IN layout",
+        )
+
+    # Halo feasibility: one-hop shifts, and any window rows falling
+    # outside the slab's cover must be servable from a replicated prior.
+    left = max(0, -delta_min)
+    right = max(0, delta_max)
+    feasible = left <= layout.chunk and right <= layout.chunk
+    why = "halo wider than one chunk (multi-hop exchange not emitted)"
+    if feasible and b_min < layout.base and not layout.has_prior:
+        feasible = False
+        why = "window reads below the slab and no prior copy exists"
+    if (feasible and trip + b_max > layout.base + layout.cover
+            and not layout.has_prior):
+        feasible = False
+        why = "window reads beyond the slab cover and no prior copy exists"
+
+    if feasible:
+        h_cost = halo_cost(layout, aval, delta_min, delta_max)
+        alternatives[HALO] = h_cost
+        if mode == "auto" and h_cost.wire_bytes < g_cost.wire_bytes:
+            return BoundaryComm(
+                stage=stage, key=key, op=HALO, cost=h_cost,
+                alternatives=alternatives,
+                reason=(f"neighbor shifts move {h_cost.wire_bytes} B vs "
+                        f"{g_cost.wire_bytes} B for the gather"),
+                shift=(delta_min, delta_max),
+            )
+        why = ("comm mode 'gather' pins the PR 1 baseline" if mode != "auto"
+               else f"gather is no more expensive "
+                    f"({g_cost.wire_bytes} B <= {h_cost.wire_bytes} B)")
+
+    return BoundaryComm(
+        stage=stage, key=key, op=ALL_GATHER, cost=g_cost,
+        alternatives=alternatives, reason=why,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared slab-window geometry (per-loop staging and fused region paths
+# must build byte-identical read windows)
+# ---------------------------------------------------------------------------
+
+
+def window_extent(chunk: int, halo: tuple[int, int]) -> int:
+    """Width of one chunk's read window: ``chunk + (b_max - b_min)``."""
+    b_min, b_max = halo
+    return chunk + (b_max - b_min)
+
+
+def window_rows(ch, halo: tuple[int, int], nrows: int) -> np.ndarray:
+    """Static (jit-level) row indices of every chunk's read window:
+    ``(num_chunks, width)``, clipped in-bounds (out-of-range rows are
+    only ever consumed by masked padding lanes)."""
+    b_min, _ = halo
+    width = window_extent(ch.chunk, halo)
+    rows = (np.arange(ch.num_chunks)[:, None] * ch.chunk + b_min
+            + np.arange(width)[None, :])
+    return np.clip(rows, 0, max(0, nrows - 1))
+
+
+def device_window_rows(ch, halo: tuple[int, int], device_index,
+                       nrows: int):
+    """Traced (in-shard_map) row indices of THIS device's chunk windows:
+    ``(local_chunks, width)`` — the fused analogue of
+    :func:`window_rows` for slicing a replicated buffer locally."""
+    b_min, _ = halo
+    width = window_extent(ch.chunk, halo)
+    base = (jnp.arange(ch.local_chunks, dtype=jnp.int32)[:, None]
+            * ch.num_devices + device_index) * ch.chunk
+    rows = base + b_min + jnp.arange(width, dtype=jnp.int32)[None, :]
+    return jnp.clip(rows, 0, max(0, nrows - 1))
+
+
+# ---------------------------------------------------------------------------
+# The halo emitter (runs inside the fused shard_map)
+# ---------------------------------------------------------------------------
+
+
+def halo_exchange(
+    stacks,
+    *,
+    axis: str,
+    num_devices: int,
+    device_index,
+    chunk: int,
+    delta_min: int,
+    delta_max: int,
+    prior=None,
+    base: int = 0,
+    cover: int | None = None,
+    dtype=None,
+):
+    """Build each local chunk's read window from a resident slab via
+    neighbor ring shifts.
+
+    ``stacks`` is this device's produced slab ``(n_loc, chunk, *rest)``
+    where (local chunk ``q``, lane ``r``) is slab row
+    ``(q * num_devices + device_index) * chunk + r``.  Returns
+    ``(n_loc, width, *rest)`` windows whose row ``r`` holds slab row
+    ``j*chunk + delta_min + r`` — exactly the layout
+    :func:`device_window_rows` produces from a replicated copy, so the
+    consumer's ``_ShiftedArray`` indexing is identical on both paths.
+
+    Chunk adjacency under the cyclic assignment: chunk ``j+1`` lives on
+    device ``d+1`` at the same local index — except on the last device,
+    where it wraps to device 0's *next* local index; symmetrically for
+    chunk ``j-1``.  Rows outside the slab's ``[0, cover)`` are patched
+    from the replicated ``prior`` copy (the boundary rows a partial
+    write never touched); remaining out-of-range rows are only consumed
+    by masked padding lanes.
+    """
+    p = num_devices
+    c = chunk
+    left = max(0, -delta_min)
+    right = max(0, delta_max)
+    if left > c or right > c:
+        raise ValueError(
+            f"halo shift ({delta_min}, {delta_max}) exceeds one chunk "
+            f"(chunk={c}); the planner should have chosen a gather")
+
+    parts = []
+    if left:
+        tails = stacks[:, c - left:]
+        recv = jax.lax.ppermute(
+            tails, axis, perm=[((i - 1) % p, i) for i in range(p)])
+        # device 0's chunk j-1 is the last device's PREVIOUS local chunk
+        rolled = jnp.concatenate([recv[:1], recv[:-1]], axis=0)
+        parts.append(jnp.where(device_index == 0, rolled, recv))
+    parts.append(stacks[:, max(0, delta_min):c + min(0, delta_max)])
+    if right:
+        heads = stacks[:, :right]
+        recv = jax.lax.ppermute(
+            heads, axis, perm=[((i + 1) % p, i) for i in range(p)])
+        # the last device's chunk j+1 is device 0's NEXT local chunk
+        rolled = jnp.concatenate([recv[1:], recv[-1:]], axis=0)
+        parts.append(jnp.where(device_index == p - 1, rolled, recv))
+    win = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+    if prior is not None:
+        n_loc, width = win.shape[0], win.shape[1]
+        j0 = (jnp.arange(n_loc, dtype=jnp.int32)[:, None] * p
+              + device_index) * c
+        rho = j0 + delta_min + jnp.arange(width, dtype=jnp.int32)[None, :]
+        pos = jnp.clip(base + rho, 0, prior.shape[0] - 1)
+        pvals = jnp.take(prior, pos, axis=0)
+        cov = cover if cover is not None else n_loc * p * c
+        inside = (rho >= 0) & (rho < cov)
+        mask = inside.reshape(inside.shape + (1,) * (win.ndim - 2))
+        win = jnp.where(mask, win, pvals.astype(win.dtype))
+    if dtype is not None:
+        win = win.astype(dtype)
+    return win
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+
+def plan_comm(
+    region,
+    env: Mapping[str, Any],
+    num_devices: int,
+    *,
+    axis: str = "data",
+    comm: str = "auto",
+) -> list[BoundaryComm]:
+    """Plan every inter-loop boundary of a region: the cost-modeled
+    communication schedule, one :class:`BoundaryComm` per slab handoff.
+
+    Accepts a :class:`~repro.core.pragma.ParallelRegion` (or a single
+    :class:`~repro.core.pragma.ParallelFor`, wrapped) plus example/aval
+    inputs; returns the decisions in stage order.  This is the planning
+    half of :func:`repro.core.region.region_to_mpi` — the same decisions
+    that lowering executes.
+    """
+    from repro.core import pragma
+    from repro.core.region import plan_region
+
+    if isinstance(region, pragma.ParallelFor):
+        region = pragma.ParallelRegion((region,))
+    rp = plan_region(region, env, num_devices, axis=axis, comm=comm)
+    return rp.comms

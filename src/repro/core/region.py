@@ -31,6 +31,14 @@ whole:
   ``"master_worker"`` lowering (and ``fuse=False``) keeps the paper's
   per-loop staging as the measurable baseline (EXPERIMENTS.md §Perf-C).
 
+Boundary lowering is delegated to the cost-modeled communication
+planner (:mod:`repro.core.comm`): each slab→consumer handoff becomes
+the cheapest of ``resident`` / ``halo`` (neighbor ``ppermute`` ring
+shifts) / ``all_gather`` / ``replicate``, recorded as a
+:class:`~repro.core.comm.BoundaryComm` on the plan.  ``comm="gather"``
+disables the halo strategy — the PR 1 baseline, kept measurable
+(EXPERIMENTS.md §Perf-D).
+
 Residency compatibility (the layout-matching rule): loop A's write slab
 holds row ``base + j*c + r`` at (chunk ``j``, lane ``r``); loop B can
 consume it in place iff both loops share the chunk geometry
@@ -49,51 +57,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import comm as comm_mod
 from repro.core import pragma, reduction as red_mod
 from repro.core import transform as tf
+from repro.core.comm import BoundaryComm, SlabLayout  # noqa: F401 (re-export)
 from repro.core.loop import LoopNotCanonical
 from repro.core.plan import DistPlan, make_plan
-from repro.core.schedule import ChunkPlan
 from repro.core.tensor_plan import slab_spec
 
 REPLICATED = "repl"
-
-
-# ---------------------------------------------------------------------------
-# Layout state
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class SlabLayout:
-    """Chunk-cyclic residency of one buffer between stages.
-
-    Device ``d`` holds stacks of shape ``(local_chunks, chunk, *rest)``;
-    (local chunk ``q``, lane ``r``) is global row
-    ``base + (q * num_devices + d) * chunk + r``.  ``cover`` rows
-    ``[base, base + cover)`` are authoritative; ``has_prior`` marks a
-    partial cover whose remaining rows live in a replicated prior copy.
-    """
-
-    chunk: int
-    num_devices: int
-    local_chunks: int
-    padded_trip: int
-    base: int
-    cover: int
-    has_prior: bool
-
-    @classmethod
-    def of(cls, plan: DistPlan, *, base: int, has_prior: bool) -> "SlabLayout":
-        ch = plan.chunks
-        return cls(ch.chunk, ch.num_devices, ch.local_chunks,
-                   ch.padded_trip, base, plan.loop.trip_count, has_prior)
-
-    def geometry_matches(self, ch: ChunkPlan) -> bool:
-        return (self.chunk == ch.chunk
-                and self.num_devices == ch.num_devices
-                and self.local_chunks == ch.local_chunks
-                and self.padded_trip == ch.padded_trip)
 
 
 @dataclasses.dataclass
@@ -123,10 +95,31 @@ class RegionPlan:
     n_elided: int                      # resident handoffs (round trips saved)
     n_reshards: int                    # minimal collectives inserted
     log: list[str]                     # human-readable transition journal
+    comms: list[BoundaryComm] = dataclasses.field(default_factory=list)
+    n_halo: int = 0                    # boundaries lowered to ppermute shifts
+    comm_mode: str = "auto"
 
     @property
     def loop_plans(self) -> list[DistPlan]:
         return [s.plan for s in self.stages if s.plan is not None]
+
+    @property
+    def planned_wire_bytes(self) -> int:
+        """Modeled wire bytes of the chosen boundary ops."""
+        return sum(bc.cost.wire_bytes for bc in self.comms)
+
+    @property
+    def gather_wire_bytes(self) -> int:
+        """Modeled wire bytes under the PR 1 rule (residency kept, every
+        non-resident boundary lowered to the gather)."""
+        total = 0
+        for bc in self.comms:
+            if bc.op == comm_mod.RESIDENT:
+                continue
+            alts = [c for op, c in bc.alternatives.items()
+                    if op in (comm_mod.ALL_GATHER, comm_mod.REPLICATE)]
+            total += alts[0].wire_bytes if alts else bc.cost.wire_bytes
+        return total
 
 
 def _aval_of(x: Any) -> jax.ShapeDtypeStruct:
@@ -134,13 +127,6 @@ def _aval_of(x: Any) -> jax.ShapeDtypeStruct:
         return x
     arr = jnp.asarray(x)
     return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
-
-
-def _nbytes(aval: jax.ShapeDtypeStruct) -> int:
-    n = 1
-    for s in aval.shape:
-        n *= s
-    return int(n) * jnp.dtype(aval.dtype).itemsize
 
 
 # ---------------------------------------------------------------------------
@@ -154,14 +140,22 @@ def plan_region(
     num_devices: int,
     *,
     axis: str = "data",
+    comm: str = "auto",
 ) -> RegionPlan:
-    """Match each loop's OUT layout against the next loop's IN needs."""
+    """Match each loop's OUT layout against the next loop's IN needs,
+    lowering each slab boundary through the cost-modeled communication
+    planner (``comm="auto"``; ``comm="gather"`` pins the PR 1 all-gather
+    baseline)."""
+    if comm not in comm_mod.COMM_MODES:
+        raise ValueError(
+            f"unknown comm mode {comm!r}; expected {comm_mod.COMM_MODES}")
     env_shapes = {k: _aval_of(v) for k, v in env.items()}
     state: dict[str, Any] = {k: REPLICATED for k in env_shapes}
     touched: set[str] = set()
     stages: list[StageExec] = []
-    n_elided = n_reshards = 0
+    n_elided = n_reshards = n_halo = 0
     log: list[str] = []
+    comms: list[BoundaryComm] = []
 
     for stage in region.stages:
         if isinstance(stage, pragma.SerialStage):
@@ -177,8 +171,13 @@ def plan_region(
                 )
             for k in gathers:
                 n_reshards += 1
+                comms.append(comm_mod.plan_boundary(
+                    stage=stage.name, key=k, layout=state[k],
+                    chunks=None, trip=0, aval=env_shapes[k],
+                    in_strategy="none", halo=None, needs_replicated=True,
+                    mode=comm))
                 log.append(f"{stage.name}: reshard {k!r} "
-                           f"(~{_nbytes(env_shapes[k])} B all-gather; "
+                           f"(~{comm_mod.full_bytes(env_shapes[k])} B all-gather; "
                            "serial glue reads it)")
                 state[k] = REPLICATED
             for k, v in out_sh.items():
@@ -204,10 +203,14 @@ def plan_region(
                 if isinstance(state.get(key), SlabLayout):
                     gathers0.append(key)
                     n_reshards += 1
-                    state[key] = REPLICATED
+                    comms.append(comm_mod.plan_boundary(
+                        stage=stage.name, key=key, layout=state[key],
+                        chunks=plan.chunks, trip=0, aval=env_shapes[key],
+                        in_strategy="none", halo=None, needs_replicated=True,
+                        mode=comm))
                     log.append(
                         f"{stage.name}: reshard {key!r} "
-                        f"(~{_nbytes(env_shapes[key])} B all-gather; "
+                        f"(~{comm_mod.full_bytes(env_shapes[key])} B all-gather; "
                         "zero-trip reduction folds the prior value)")
                 state[key] = REPLICATED
                 touched.add(key)
@@ -226,13 +229,6 @@ def plan_region(
             is_slab = isinstance(st, SlabLayout)
             write_b = dec.write_map.b if dec.write_map is not None else None
 
-            resident = False
-            if is_slab and st.geometry_matches(plan.chunks) and st.cover == t:
-                if dec.in_strategy == "shard":
-                    resident = st.base == 0
-                elif dec.in_strategy == "shard_halo":
-                    resident = dec.halo == (st.base, st.base)
-
             # Out-merges that consume the pre-stage value need it
             # replicated — except a partial write replacing a slab of the
             # identical interval, whose prior chains through.
@@ -243,32 +239,45 @@ def plan_region(
                 or (dec.out_strategy == "partial" and not interval_same)
                 or (dec.out_strategy == "reduce" and key in state)
             )
-            if prior_repl:
-                resident = False
 
-            if resident:
-                feeds[key] = "resident"
-                n_elided += 1
-                log.append(
-                    f"{stage.name}: {key!r} stays RESIDENT "
-                    f"(elides ~{2 * _nbytes(env_shapes[key])} B "
-                    "gather+redistribute round trip)")
-            else:
-                needs_repl = (
-                    prior_repl
-                    or dec.in_strategy in ("shard", "shard_halo", "replicate")
-                )
-                if is_slab and needs_repl:
+            consumes = dec.in_strategy in ("shard", "shard_halo", "replicate")
+            if is_slab and (prior_repl or consumes):
+                bc = comm_mod.plan_boundary(
+                    stage=stage.name, key=key, layout=st, chunks=plan.chunks,
+                    trip=t, aval=env_shapes[key],
+                    in_strategy=dec.in_strategy, halo=dec.halo,
+                    needs_replicated=(prior_repl
+                                      or dec.in_strategy == "replicate"),
+                    mode=comm)
+                comms.append(bc)
+                if bc.op == comm_mod.RESIDENT:
+                    feeds[key] = "resident"
+                    n_elided += 1
+                    log.append(
+                        f"{stage.name}: {key!r} stays RESIDENT "
+                        f"(elides ~{2 * comm_mod.full_bytes(env_shapes[key])} B "
+                        "gather+redistribute round trip)")
+                elif bc.op == comm_mod.HALO:
+                    feeds[key] = "halo"
+                    n_halo += 1
+                    g = bc.alternatives[comm_mod.ALL_GATHER].wire_bytes
+                    log.append(
+                        f"{stage.name}: {key!r} HALO-EXCHANGED "
+                        f"(shift {bc.shift}, {bc.cost.hops} ppermute hop(s), "
+                        f"~{bc.cost.wire_bytes} B on the wire vs ~{g} B "
+                        "all-gather)")
+                else:
                     gathers.append(key)
                     n_reshards += 1
                     state[key] = REPLICATED
                     log.append(
                         f"{stage.name}: reshard {key!r} "
-                        f"(~{_nbytes(env_shapes[key])} B all-gather; "
-                        f"layout incompatible with {dec.in_strategy!r} in / "
-                        f"{dec.out_strategy!r} out)")
-                if dec.in_strategy in ("shard", "shard_halo"):
-                    feeds[key] = "slice"
+                        f"(~{comm_mod.full_bytes(env_shapes[key])} B all-gather; "
+                        f"{bc.reason})")
+                    if dec.in_strategy in ("shard", "shard_halo"):
+                        feeds[key] = "slice"
+            elif dec.in_strategy in ("shard", "shard_halo"):
+                feeds[key] = "slice"
 
             if dec.out_strategy == "identity":
                 state[key] = SlabLayout.of(plan, base=0, has_prior=False)
@@ -294,6 +303,7 @@ def plan_region(
         stages=stages, env_keys=list(env.keys()),
         touched_keys=sorted(touched), final_layout=final_layout,
         n_elided=n_elided, n_reshards=n_reshards, log=log,
+        comms=comms, n_halo=n_halo, comm_mode=comm,
     )
 
 
@@ -315,6 +325,7 @@ class DistributedRegion:
     shard_inputs: bool = False          # per-loop fallback path only
     unroll_chunks: bool = False
     paper_master_excluded: bool | None = None
+    comm: str = "auto"                  # boundary planner mode
 
     def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
         env = {k: jnp.asarray(v) for k, v in env.items()}
@@ -322,7 +333,8 @@ class DistributedRegion:
             return self._run_staged(env)
         if self.plan is None:
             self.plan = plan_region(
-                self.region, env, self.mesh.shape[self.axis], axis=self.axis)
+                self.region, env, self.mesh.shape[self.axis], axis=self.axis,
+                comm=self.comm)
         return _execute_region(self, env)
 
     def _run_staged(self, env: dict) -> dict:
@@ -362,6 +374,7 @@ def region_to_mpi(
     unroll_chunks: bool = False,
     env_like: Mapping[str, Any] | None = None,
     paper_master_excluded: bool | None = None,
+    comm: str = "auto",
 ) -> DistributedRegion:
     """Transform a whole :class:`~repro.core.pragma.ParallelRegion`.
 
@@ -369,6 +382,12 @@ def region_to_mpi(
     shard_map with inter-loop residency; ``fuse=False`` or
     ``lowering="master_worker"`` stage each loop in isolation — the
     paper's per-loop pattern, kept as the measurable baseline.
+
+    ``comm`` selects the boundary planner mode: ``"auto"`` (default)
+    lowers each slab boundary to the cheapest of resident / halo
+    ``ppermute`` / all_gather / replicate by the
+    :mod:`repro.core.comm` cost model; ``"gather"`` pins the PR 1
+    all-gather-only baseline (EXPERIMENTS.md §Perf-D).
     """
     if isinstance(region, pragma.ParallelFor):
         region = pragma.ParallelRegion((region,))
@@ -376,15 +395,19 @@ def region_to_mpi(
         raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
     if lowering not in ("collective", "master_worker"):
         raise ValueError(f"unknown lowering {lowering!r}")
+    if comm not in comm_mod.COMM_MODES:
+        raise ValueError(
+            f"unknown comm mode {comm!r}; expected {comm_mod.COMM_MODES}")
     if lowering == "master_worker":
         fuse = False
     plan = None
     if env_like is not None and lowering == "collective" and fuse:
-        plan = plan_region(region, env_like, mesh.shape[axis], axis=axis)
+        plan = plan_region(region, env_like, mesh.shape[axis], axis=axis,
+                           comm=comm)
     return DistributedRegion(
         region=region, mesh=mesh, plan=plan, axis=axis, lowering=lowering,
         fuse=fuse, shard_inputs=shard_inputs, unroll_chunks=unroll_chunks,
-        paper_master_excluded=paper_master_excluded,
+        paper_master_excluded=paper_master_excluded, comm=comm,
     )
 
 
@@ -396,14 +419,10 @@ def region_to_mpi(
 def _local_slabs(x, plan: DistPlan, dec, d):
     """Slice THIS device's chunk slabs out of a replicated buffer —
     pure local indexing, the fused analogue of the jit-level
-    ``_pad_reshape``/``_halo_slabs`` staging."""
-    ch = plan.chunks
-    b_min, b_max = dec.halo if dec.halo is not None else (0, 0)
-    width = ch.chunk + (b_max - b_min)
-    base = (jnp.arange(ch.local_chunks, dtype=jnp.int32)[:, None]
-            * ch.num_devices + d) * ch.chunk
-    rows = base + b_min + jnp.arange(width, dtype=jnp.int32)[None, :]
-    rows = jnp.clip(rows, 0, x.shape[0] - 1)
+    ``_pad_reshape``/``_halo_slabs`` staging (same shared window
+    geometry: :func:`repro.core.comm.device_window_rows`)."""
+    halo = dec.halo if dec.halo is not None else (0, 0)
+    rows = comm_mod.device_window_rows(plan.chunks, halo, d, x.shape[0])
     return jnp.take(x, rows, axis=0)        # (n_loc, width, *rest)
 
 
@@ -468,8 +487,21 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
             for key in plan.context.env_keys:
                 dec = plan.vars[key]
                 if dec.in_strategy in ("shard", "shard_halo"):
-                    if se.feeds[key] == "resident":
+                    feed = se.feeds[key]
+                    if feed == "resident":
                         slab_stacks[key] = st[key][1]
+                    elif feed == "halo":
+                        # neighbor ppermute ring shifts: the planned
+                        # point-to-point boundary exchange (§3.1.4)
+                        _, stacks, sbase, scover, sprior, sdtype = st[key]
+                        h = dec.halo if dec.halo is not None else (0, 0)
+                        slab_stacks[key] = comm_mod.halo_exchange(
+                            stacks, axis=axis,
+                            num_devices=plan.chunks.num_devices,
+                            device_index=d, chunk=plan.chunks.chunk,
+                            delta_min=h[0] - sbase, delta_max=h[1] - sbase,
+                            prior=sprior, base=sbase, cover=scover,
+                            dtype=sdtype)
                     else:
                         slab_stacks[key] = _local_slabs(
                             st[key][1], plan, dec, d)

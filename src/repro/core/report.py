@@ -111,8 +111,21 @@ def render_region(rp) -> str:
         lines.append("  (no inter-stage traffic: single loop or "
                      "disjoint buffers)")
     lines.append("")
+    lines.append("communication plan (cost-modeled boundary lowering, "
+                 "paper §3.1.4 block-boundary send/recv):")
+    if rp.comms:
+        for bc in rp.comms:
+            lines.append(f"  {bc.describe()}")
+            lines.append(f"  {'':>4s}why: {bc.reason}")
+        lines.append(
+            f"  planned wire total: ~{rp.planned_wire_bytes} B "
+            f"(all-gather-only baseline: ~{rp.gather_wire_bytes} B)")
+    else:
+        lines.append("  (no slab boundaries: nothing to exchange)")
+    lines.append("")
     lines.append(
         f"residency summary: {rp.n_elided} resident handoff(s) elided, "
+        f"{rp.n_halo} halo ppermute exchange(s), "
         f"{rp.n_reshards} minimal reshard collective(s) inserted")
     lines.append("")
     lines.append("per-loop staged estimate (paper: every block round-trips "

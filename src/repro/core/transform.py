@@ -39,6 +39,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import comm as comm_mod
 from repro.core import pragma, reduction as red_mod
 from repro.core.context import ReadKind, VarClass, WriteKind
 from repro.core.loop import LoopNotCanonical, analyze_loop
@@ -62,6 +63,21 @@ def run_reference(program: pragma.ParallelFor, env: Mapping[str, Any]) -> dict:
     out = dict(env)
     t = loop.trip_count
     if t == 0:
+        # A zero-trip loop writes nothing — except that a reduction
+        # clause *defines* its variable as the op identity even over an
+        # empty iteration space (OpenMP initialises the private copy
+        # before any iteration runs).  Buffers already in env keep their
+        # value (identity folds are no-ops); fresh reduction outputs
+        # must still exist, matching the distributed executors.
+        fresh = [k for k in program.reduction if k not in out]
+        if fresh:
+            upds = jax.eval_shape(
+                program.body, jax.ShapeDtypeStruct((), jnp.int32), env)
+            for key in fresh:
+                rop = red_mod.get_reduction(program.reduction[key])
+                out[key] = red_mod.identity_like(
+                    rop, jnp.zeros(upds[key].value.shape,
+                                   upds[key].value.dtype))
         return out
 
     ivec = program.start + program.step * jnp.arange(t, dtype=jnp.int32)
@@ -212,13 +228,14 @@ def _pad_reshape(x, plan):
 def _halo_slabs(x, plan, halo):
     """(N, *rest) -> (n_loc, P, c + halo_width, *rest): each chunk's slab
     carries its read window [k*c + b_min, (k+1)*c - 1 + b_max] — the
-    stencil halo exchange (rows duplicated at chunk edges)."""
+    stencil halo exchange (rows duplicated at chunk edges).  The window
+    geometry is shared with the fused region path
+    (:func:`repro.core.comm.window_rows` /
+    :func:`repro.core.comm.halo_exchange`) so both build byte-identical
+    read windows."""
     ch = plan.chunks
-    b_min, b_max = halo
-    width = ch.chunk + (b_max - b_min)
-    rows = (np.arange(ch.num_chunks)[:, None] * ch.chunk + b_min
-            + np.arange(width)[None, :])
-    rows = np.clip(rows, 0, x.shape[0] - 1)
+    width = comm_mod.window_extent(ch.chunk, halo)
+    rows = comm_mod.window_rows(ch, halo, x.shape[0])
     slab = x[rows]                                   # (K', width, *rest)
     return slab.reshape((ch.local_chunks, ch.num_devices, width)
                         + x.shape[1:])

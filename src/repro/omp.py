@@ -17,6 +17,13 @@ from repro.core.context import (  # noqa: F401
     WriteKind,
     analyze_context,
 )
+from repro.core.comm import (  # noqa: F401
+    BoundaryComm,
+    CommCost,
+    halo_exchange,
+    plan_boundary,
+    plan_comm,
+)
 from repro.core.loop import LoopInfo, LoopNotCanonical, analyze_loop  # noqa: F401
 from repro.core.plan import DistPlan, KAffine, make_plan  # noqa: F401
 from repro.core.pragma import (  # noqa: F401

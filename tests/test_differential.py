@@ -1,0 +1,300 @@
+"""Differential test harness: random canonical OMP programs vs their
+transformations, across 1/2/4-device meshes.
+
+This is the regression net under the communication-planner refactor:
+programs are drawn from the canonical-form families the paper recognises
+(identity / aligned / strided affine writes, stencil reads with halo
+offsets, reductions, ``put``, serial glue, multi-loop chains; schedules
+``static``/``dynamic``/``guided`` with and without explicit chunk sizes,
+including zero-trip and trip_count < num_devices draws) and every
+lowering must reproduce the shared-memory reference
+(:func:`repro.core.transform.run_reference`):
+
+* ``omp.to_mpi`` collective, with and without ``shard_inputs``,
+* ``omp.to_mpi`` master/worker (the paper's staging; needs >= 2 ranks),
+* ``omp.region_to_mpi`` fused, both ``comm="auto"`` (cost-modeled halo
+  ``ppermute`` boundaries) and ``comm="gather"`` (the PR 1 baseline),
+  plus the ``fuse=False`` staged fallback.
+
+Single-device examples run in-process through the (vendored) hypothesis
+``given``; the 2/4-device sweep runs in one subprocess with forced
+virtual devices (``conftest.run_multidevice``) and re-draws the same
+seeded cases there.
+"""
+import os
+import random
+
+import numpy as np
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FAMILIES = (
+    "map", "stencil", "strided", "reduce", "put", "combo",
+    "chain", "pingpong", "glue", "zerotrip",
+)
+
+
+def _schedule(rng):
+    from repro import omp
+
+    kind = rng.choice([omp.static, omp.dynamic, omp.guided])
+    chunk = rng.choice([None, None, 1, 2, 3, 5])
+    return kind(chunk)
+
+
+def make_case(seed: int, family: str | None = None):
+    """Build one random canonical program (or region) + env from a seed.
+
+    Deterministic: the in-process and subprocess sweeps rebuild
+    identical cases from the same seed.  ``family`` forces one program
+    family (the multi-device sweep uses it to guarantee every family —
+    in particular the halo-exercising stencil/pingpong ones — runs on
+    every mesh size).
+    """
+    import jax.numpy as jnp
+
+    from repro import omp
+
+    rng = random.Random(seed)
+    if family is None:
+        family = rng.choice(FAMILIES)
+    assert family in FAMILIES, family
+    sched = _schedule(rng)
+    fx = jnp.float32
+
+    if family == "map":
+        n = rng.randint(3, 24)
+        start = rng.choice([0, 0, 1, 2])
+        stop = rng.randint(start, n)          # may draw a zero-trip loop
+        step = rng.choice([1, 1, 2])
+
+        @omp.parallel_for(start=start, stop=stop, step=step, schedule=sched,
+                          name=f"map{seed}")
+        def prog(i, env):
+            return {"y": omp.at(i, env["x"][i] * 2.0 + 1.0)}
+
+        env = {"x": jnp.arange(n, dtype=fx) * 0.25, "y": -jnp.ones(n, fx)}
+
+    elif family == "stencil":
+        n = rng.randint(8, 24)
+        w = rng.choice([1, 2])
+
+        @omp.parallel_for(start=w, stop=n - w, schedule=sched,
+                          name=f"stencil{seed}")
+        def prog(i, env):
+            v = (env["x"][i - w] + env["x"][i] + env["x"][i + w]) / 3.0
+            return {"y": omp.at(i, v)}
+
+        env = {"x": jnp.arange(n, dtype=fx) * 0.5, "y": -jnp.ones(n, fx)}
+
+    elif family == "strided":
+        t = rng.randint(1, 9)
+        a = rng.choice([2, 3])
+        b = rng.randint(0, 2)
+        m = a * (t - 1) + b + 1
+
+        @omp.parallel_for(stop=t, schedule=sched, name=f"strided{seed}")
+        def prog(i, env):
+            return {"z": omp.at(a * i + b, env["x"][i] + 3.0)}
+
+        env = {"x": jnp.arange(max(t, 2), dtype=fx), "z": -jnp.ones(m, fx)}
+
+    elif family == "reduce":
+        n = rng.randint(1, 20)
+        op = rng.choice(["+", "max", "min", "*"])
+        fresh = rng.random() < 0.4
+
+        @omp.parallel_for(stop=n, schedule=sched, reduction={"s": op},
+                          name=f"reduce{seed}")
+        def prog(i, env):
+            return {"s": omp.red(env["x"][i])}
+
+        # keep values near 1 so "*" stays well-conditioned
+        env = {"x": 1.0 + 0.1 * jnp.sin(jnp.arange(n, dtype=fx))}
+        if not fresh:
+            env["s"] = fx(0.5)
+
+    elif family == "put":
+        t = rng.randint(1, 9)
+
+        @omp.parallel_for(stop=t, schedule=sched, name=f"put{seed}")
+        def prog(i, env):
+            return {"w": omp.put(jnp.full((3,), 1.0, fx) * i)}
+
+        env = {"x": jnp.arange(t, dtype=fx), "w": jnp.zeros(3, fx)}
+
+    elif family == "combo":
+        n = rng.randint(2, 16)
+
+        @omp.parallel_for(stop=n, schedule=sched, reduction={"s": "+"},
+                          name=f"combo{seed}")
+        def prog(i, env):
+            v = env["x"][i] * env["x"][i]
+            return {"y": omp.at(i, v), "s": omp.red(v)}
+
+        env = {"x": jnp.arange(n, dtype=fx) * 0.3, "y": jnp.zeros(n, fx),
+               "s": fx(1.0)}
+
+    elif family == "chain":
+        n = rng.randint(4, 24)
+
+        @omp.parallel_for(stop=n, schedule=sched, name=f"c1_{seed}")
+        def l1(i, env):
+            return {"tmp": omp.at(i, env["x"][i] * 2.0)}
+
+        @omp.parallel_for(stop=n, schedule=sched, name=f"c2_{seed}")
+        def l2(i, env):
+            return {"y": omp.at(i, env["tmp"][i] + 1.0)}
+
+        @omp.parallel_for(stop=n, schedule=sched, reduction={"tot": "+"},
+                          name=f"c3_{seed}")
+        def l3(i, env):
+            return {"tot": omp.red(env["y"][i])}
+
+        prog = omp.region(l1, l2, l3, name=f"chain{seed}")
+        env = {"x": jnp.arange(n, dtype=fx) * 0.1, "tmp": jnp.zeros(n, fx),
+               "y": jnp.zeros(n, fx), "tot": fx(0.0)}
+
+    elif family == "pingpong":
+        n = rng.randint(10, 28)
+
+        def sweep(src, dst, name):
+            @omp.parallel_for(start=1, stop=n - 1, schedule=sched, name=name)
+            def body(i, env):
+                v = 0.25 * (env[src][i - 1] + 2.0 * env[src][i]
+                            + env[src][i + 1])
+                return {dst: omp.at(i, v)}
+            return body
+
+        prog = omp.region(sweep("a", "b", f"s1_{seed}"),
+                          sweep("b", "a", f"s2_{seed}"),
+                          sweep("a", "b", f"s3_{seed}"),
+                          name=f"pingpong{seed}")
+        env = {"a": jnp.sin(jnp.arange(n, dtype=fx)),
+               "b": jnp.zeros(n, fx)}
+
+    elif family == "glue":
+        n = rng.randint(4, 20)
+
+        @omp.parallel_for(stop=n, schedule=sched, name=f"g1_{seed}")
+        def g1(i, env):
+            return {"tmp": omp.at(i, env["x"][i] * env["x"][i])}
+
+        glue = omp.serial(lambda env: {"bias": env["bias"] * 0.5},
+                          reads=("bias",), name=f"halve{seed}")
+
+        @omp.parallel_for(stop=n, schedule=sched, name=f"g2_{seed}")
+        def g2(i, env):
+            return {"y": omp.at(i, env["tmp"][i] + env["bias"][0])}
+
+        prog = omp.region(g1, glue, g2, name=f"glue{seed}")
+        env = {"x": jnp.arange(n, dtype=fx) * 0.2, "tmp": jnp.zeros(n, fx),
+               "y": jnp.zeros(n, fx), "bias": jnp.full((1,), 3.0, fx)}
+
+    else:  # zerotrip
+        n = rng.randint(3, 12)
+
+        @omp.parallel_for(stop=0, schedule=sched, reduction={"s": "+"},
+                          name=f"z0_{seed}")
+        def z0(i, env):
+            return {"y": omp.at(i, env["x"][i]), "s": omp.red(env["x"][i])}
+
+        @omp.parallel_for(stop=n, schedule=sched, name=f"z1_{seed}")
+        def z1(i, env):
+            return {"y": omp.at(i, env["x"][i] + env["s"])}
+
+        prog = omp.region(z0, z1, name=f"zerotrip{seed}")
+        env = {"x": jnp.arange(n, dtype=fx), "y": jnp.zeros(n, fx),
+               "s": fx(7.0)}
+
+    return prog, env, family
+
+
+def check_case(seed: int, mesh, family: str | None = None) -> str:
+    """Every lowering of the drawn program must match the reference."""
+    from repro import omp
+
+    prog, env, family = make_case(seed, family)
+    is_region = isinstance(prog, omp.ParallelRegion)
+    ref = prog(env)
+    p = mesh.shape["data"]
+
+    variants = {}
+    if is_region:
+        variants["region_auto"] = omp.region_to_mpi(prog, mesh, comm="auto")
+        variants["region_gather"] = omp.region_to_mpi(prog, mesh,
+                                                      comm="gather")
+        variants["region_staged"] = omp.region_to_mpi(prog, mesh, fuse=False)
+        if p >= 2:
+            variants["region_mw"] = omp.region_to_mpi(
+                prog, mesh, lowering="master_worker")
+    else:
+        variants["mpi"] = omp.to_mpi(prog, mesh)
+        variants["mpi_sharded"] = omp.to_mpi(prog, mesh, shard_inputs=True)
+        if p >= 2:
+            variants["mpi_mw"] = omp.to_mpi(prog, mesh,
+                                            lowering="master_worker")
+
+    for vname, dist in variants.items():
+        got = dist(env)
+        assert set(got) == set(ref), (
+            f"seed={seed} {family}/{vname} P={p}: key set "
+            f"{sorted(got)} != {sorted(ref)}")
+        for k in ref:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(ref[k]),
+                rtol=1e-4, atol=1e-4,
+                err_msg=f"seed={seed} {family}/{vname} P={p} key={k!r}")
+    return family
+
+
+def run_sweep(seeds, device_counts) -> None:
+    """Subprocess entry point: sweep seeds over real sub-meshes.
+
+    Every family is forced once per mesh size (random seeds alone can
+    miss the halo-exercising stencil/pingpong families), then the free
+    seeds add schedule/shape variety on top.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    covered = set()
+    for k in device_counts:
+        mesh = Mesh(np.asarray(jax.devices()[:k]), ("data",))
+        for j, fam in enumerate(FAMILIES):
+            covered.add(check_case(1000 * k + j, mesh, family=fam))
+        for seed in seeds:
+            covered.add(check_case(seed, mesh))
+    assert covered == set(FAMILIES), sorted(set(FAMILIES) - covered)
+    print("families:", ",".join(sorted(covered)))
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_differential_single_device(seed):
+    """1-device meshes: the transformation must be a semantic no-op for
+    every drawn program."""
+    import jax
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    check_case(seed, mesh)
+
+
+def test_differential_multidevice(multidevice):
+    """2- and 4-device meshes (4 virtual devices, one subprocess):
+    every lowering of every drawn case matches the reference."""
+    out = multidevice(f"""
+        import sys
+        sys.path.insert(0, {REPO!r})
+        from tests.test_differential import FAMILIES, run_sweep
+        run_sweep(seeds=range(4), device_counts=(2, 4))
+        print("OKDIFF")
+    """, n_devices=4)
+    assert "OKDIFF" in out
+    families_line = [l for l in out.splitlines()
+                     if l.startswith("families:")][0]
+    for fam in FAMILIES:
+        assert fam in families_line, fam

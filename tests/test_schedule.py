@@ -1,4 +1,8 @@
-"""Workload distribution math (paper §3.1.3)."""
+"""Workload distribution math (paper §3.1.3), including the zero-trip
+and trip_count < num_devices edge cases the boundary lowering must
+survive (previously only exercised implicitly)."""
+import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro import omp
@@ -58,3 +62,110 @@ def test_owner_of_last_iteration():
     loop = analyze_loop(0, 100, 1)
     plan = make_chunk_plan(loop, omp.dynamic(), 8)
     assert plan.owner_of_last_iteration() == plan.owner_of_iteration(99)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases: zero-trip loops and trip_count < num_devices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [1, 2, 8, 16])
+@pytest.mark.parametrize("sched", [
+    omp.dynamic(), omp.static(), omp.guided(), omp.static(5), omp.dynamic(3),
+])
+def test_zero_trip_chunk_plan_invariants(p, sched):
+    """A zero-trip loop still yields a well-formed (degenerate) plan:
+    positive chunk, padded layout divisible by the device count, no
+    iteration owners to assign."""
+    plan = make_chunk_plan(analyze_loop(0, 0, 1), sched, p)
+    assert plan.trip_count == 0
+    assert plan.chunk >= 1
+    assert plan.num_chunks % p == 0 and plan.num_chunks >= p
+    assert plan.local_chunks * p == plan.num_chunks
+    assert plan.padded_trip == plan.num_chunks * plan.chunk
+    assert plan.padding == plan.padded_trip
+    assert plan.owner_of_last_iteration() == 0
+
+
+@pytest.mark.parametrize("t,p", [(1, 8), (3, 8), (7, 8), (2, 16), (5, 6)])
+@pytest.mark.parametrize("sched", [omp.dynamic(), omp.static(), omp.static(2)])
+def test_small_trip_chunk_plan_invariants(t, p, sched):
+    """trip_count < num_devices: chunks stay >= 1 iteration, the cyclic
+    assignment covers every iteration exactly once, and idle devices get
+    only padding chunks."""
+    plan = make_chunk_plan(analyze_loop(0, t, 1), sched, p)
+    assert 1 <= plan.chunk <= max(1, t)
+    assert plan.padded_trip >= t
+    owners = [plan.owner_of_iteration(k) for k in range(t)]
+    assert all(0 <= o < p for o in owners)
+    # devices beyond the populated chunks own no real iteration
+    busy = set(owners)
+    assert len(busy) == min(p, -(-t // plan.chunk))
+
+
+def _mesh1():
+    import jax
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+
+def test_zero_trip_execution_matches_reference():
+    """t == 0 is a no-op for writes; a declared reduction key already in
+    env keeps its value, and the key-set of reference and transformed
+    outputs agree."""
+    @omp.parallel_for(start=5, stop=5, reduction={"s": "+"}, name="z")
+    def z(i, env):
+        return {"y": omp.at(i, env["x"][i]), "s": omp.red(env["x"][i])}
+
+    env = {"x": jnp.arange(4, dtype=jnp.float32),
+           "y": -jnp.ones(4, jnp.float32), "s": jnp.float32(3.5)}
+    ref = omp.run_reference(z, env)
+    out = omp.to_mpi(z, _mesh1())(env)
+    assert sorted(ref) == sorted(out)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]))
+    assert float(out["s"]) == 3.5 and float(out["y"][0]) == -1.0
+
+
+def test_zero_trip_fresh_reduction_key_consistent():
+    """A zero-trip loop whose reduction output is NOT in env defines it
+    as the op identity in BOTH executors (the reference used to drop the
+    key while the distributed program emitted it)."""
+    @omp.parallel_for(stop=0, reduction={"s": "+", "m": "max"}, name="zf")
+    def zf(i, env):
+        return {"s": omp.red(env["x"][i]), "m": omp.red(env["x"][i])}
+
+    env = {"x": jnp.arange(4, dtype=jnp.float32)}
+    ref = omp.run_reference(zf, env)
+    out = omp.to_mpi(zf, _mesh1())(env)
+    assert sorted(ref) == sorted(out) == ["m", "s", "x"]
+    assert float(ref["s"]) == float(out["s"]) == 0.0
+    # max identity: -inf (or the dtype minimum, depending on the op table)
+    assert float(ref["m"]) == float(out["m"])
+    assert float(ref["m"]) <= float(np.finfo(np.float32).min)
+
+
+def test_small_trip_execution_all_strategies():
+    """trip_count < num_chunks-worth-of-devices: identity, strided
+    scatter, put and reduction outputs all survive the padding chunks."""
+    t = 3
+
+    @omp.parallel_for(stop=t, schedule=omp.dynamic(), reduction={"s": "+"},
+                      name="small")
+    def small(i, env):
+        return {"y": omp.at(i, env["x"][i] * 2.0),
+                "z": omp.at(2 * i + 1, env["x"][i]),
+                "w": omp.put(jnp.full((4,), 1.0, jnp.float32) * i),
+                "s": omp.red(env["x"][i])}
+
+    env = {"x": jnp.arange(t, dtype=jnp.float32),
+           "y": jnp.zeros(t, jnp.float32),
+           "z": -jnp.ones(8, jnp.float32),
+           "w": jnp.zeros(4, jnp.float32), "s": jnp.float32(1.0)}
+    ref = omp.run_reference(small, env)
+    for kw in (dict(), dict(shard_inputs=True)):
+        out = omp.to_mpi(small, _mesh1(), **kw)(env)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(ref[k]), err_msg=str(kw))

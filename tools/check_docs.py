@@ -22,6 +22,14 @@ REQUIRED = [
     "CHANGES.md",
 ]
 
+# Sections/markers each doc must keep (guards against silently dropping
+# the subsystem docs when files are rewritten).
+REQUIRED_SECTIONS = {
+    "README.md": ["## Communication planning"],
+    "EXPERIMENTS.md": ["## Perf-D"],
+    "docs/PAPER_MAP.md": ["core/comm.py"],
+}
+
 # repo-relative path tokens inside backticks, e.g. `src/repro/core/plan.py`
 # (optionally followed by ::symbol or (symbols) which we strip)
 _PATH_RE = re.compile(
@@ -37,6 +45,7 @@ def main() -> int:
         return 1
 
     bad: list[tuple[str, str]] = []
+    missing_sections: list[tuple[str, str]] = []
     checked = 0
     for doc in REQUIRED:
         text = open(os.path.join(REPO, doc), encoding="utf-8").read()
@@ -44,13 +53,24 @@ def main() -> int:
             checked += 1
             if not os.path.isfile(os.path.join(REPO, ref)):
                 bad.append((doc, ref))
+        for needle in REQUIRED_SECTIONS.get(doc, ()):
+            if needle not in text:
+                missing_sections.append((doc, needle))
+    rc = 0
     if bad:
         for doc, ref in sorted(bad):
             print(f"BROKEN PATH: {doc} -> {ref}")
-        return 1
-    print(f"docs ok: {len(REQUIRED)} documents, "
-          f"{checked} referenced paths resolve")
-    return 0
+        rc = 1
+    if missing_sections:
+        for doc, needle in sorted(missing_sections):
+            print(f"MISSING SECTION: {doc} must contain {needle!r}")
+        rc = 1
+    if rc == 0:
+        n_sections = sum(len(v) for v in REQUIRED_SECTIONS.values())
+        print(f"docs ok: {len(REQUIRED)} documents, "
+              f"{checked} referenced paths resolve, "
+              f"{n_sections} required sections present")
+    return rc
 
 
 if __name__ == "__main__":
