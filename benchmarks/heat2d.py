@@ -1,0 +1,145 @@
+"""2-D five-point heat benchmark: row+column halo rings vs all-gather.
+
+The acceptance experiment for the 2-D mesh decomposition
+(EXPERIMENTS.md §Perf-E): three ping-pong Jacobi sweeps over an
+``n x m`` grid, each a ``collapse(2)`` nest consuming the previous
+array through the 5-point window and overwriting the one before it —
+the paper's dominant benchmark shape (§4: Jacobi/heat), now decomposed
+over BOTH grid axes on a 4x2 mesh.
+
+Variants:
+
+* ``fused_halo``   — ``omp.region_to_mpi(..., comm="auto")``: each 2-D
+  boundary lowers to row-ring + column-ring ``ppermute`` shifts moving
+  O(halo · perimeter) cells (corners ride the second pass),
+* ``fused_gather`` — ``comm="gather"``: the PR 1 rule (one
+  ``all_gather`` of the whole padded slab per boundary, O(n·m) cells).
+
+The headline numbers are the **modeled boundary wire bytes** (the comm
+cost model's per-boundary decisions) and the optimized-HLO collective
+traffic; the acceptance bar is ``gather >= 5 x halo`` modeled bytes.
+
+This script must see 8 virtual devices, so it forces XLA_FLAGS *before*
+importing jax — run it directly (``python benchmarks/heat2d.py``) or
+through ``benchmarks/run.py``.  Wall-clock on forced host devices is
+NOT a cluster measurement; the byte counts are the backend-independent
+result.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+jax.config.update("jax_platforms", "cpu")
+
+MESH_SHAPE = (4, 2)
+N, M = 256, 128
+CHUNK = 16
+
+
+def make_heat2d_chain(n=N, m=M, c=CHUNK):
+    """3 ping-pong 5-point sweeps: a -> b -> a -> b over the interior."""
+    from repro import omp
+
+    def sweep(src, dst, name):
+        @omp.parallel_for(start=(1, 1), stop=(n - 1, m - 1), collapse=2,
+                          schedule=omp.static(c), name=name)
+        def body(i, j, env):
+            v = 0.25 * (env[src][i - 1, j] + env[src][i + 1, j]
+                        + env[src][i, j - 1] + env[src][i, j + 1])
+            return {dst: omp.at((i, j), v)}
+        return body
+
+    reg = omp.region(
+        sweep("a", "b", "sweep1"),
+        sweep("b", "a", "sweep2"),
+        sweep("a", "b", "sweep3"),
+        name="heat2d",
+    )
+    env = {"a": jnp.sin(jnp.arange(n * m, dtype=jnp.float32) * 0.01)
+                   .reshape(n, m),
+           "b": jnp.zeros((n, m), jnp.float32)}
+    return reg, env
+
+
+def _timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def measure():
+    from repro import omp
+    from repro.compat import make_mesh
+    from repro.launch import hlo_analysis as ha
+
+    mesh = make_mesh(MESH_SHAPE, ("i", "j"))
+    reg, env = make_heat2d_chain()
+    ref = reg(env)
+    avals = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in env.items()}
+
+    variants = [
+        ("fused_halo", omp.region_to_mpi(reg, mesh, env_like=env,
+                                         comm="auto")),
+        ("fused_gather", omp.region_to_mpi(reg, mesh, env_like=env,
+                                           comm="gather")),
+    ]
+    rows = []
+    modeled = {}
+    for vname, prog in variants:
+        jitted = jax.jit(lambda e, prog=prog: prog(e))
+        got = jitted(env)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=1e-4, atol=1e-4)
+        co = jitted.lower(avals).compile()
+        rep = ha.analyze_hlo(co.as_text(), num_devices=int(np.prod(MESH_SHAPE)))
+        n_ops = sum(c.multiplier for c in rep.collectives)
+        us = _timeit(jitted, env)
+        modeled[vname] = prog.plan.planned_wire_bytes
+        ops = ",".join(bc.op for bc in prog.plan.comms)
+        rows.append((f"heat2d_{vname}", us,
+                     f"collective_ops={n_ops}"
+                     f";wire_bytes={int(rep.total_wire_bytes)}"
+                     f";halo={prog.plan.n_halo}"
+                     f";reshards={prog.plan.n_reshards}"
+                     f";boundary_ops={ops}"
+                     f";modeled_wire={prog.plan.planned_wire_bytes}"
+                     f";modeled_gather_wire={prog.plan.gather_wire_bytes}"))
+
+    ratio = modeled["fused_gather"] / max(1, modeled["fused_halo"])
+    rows.append(("heat2d_boundary", 0.0,
+                 f"modeled_halo_bytes={modeled['fused_halo']}"
+                 f";modeled_gather_bytes={modeled['fused_gather']}"
+                 f";ratio={ratio:.1f}"))
+    return rows, ratio
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    rows, ratio = measure()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    assert ratio >= 5.0, (
+        f"2-D halo boundaries must move >=5x fewer modeled wire bytes "
+        f"(got {ratio:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,8 @@
 """Benchmark harness. One section per paper table/figure; prints
-``name,us_per_call,derived`` CSV rows.
+``name,us_per_call,derived`` CSV rows, and with ``--json out.json``
+also writes the machine-readable result set (wall time per benchmark
+plus any wire-byte counters parsed out of ``derived``) so the perf
+trajectory can be recorded run over run.
 
 Sections:
 * polybench_* (paper Fig. 6): seq vs OpenMP-analogue vs OMP2MPI-generated
@@ -7,6 +10,8 @@ Sections:
   plan's compute/communication split (this container has one real CPU
   device, so cluster scaling cannot be wall-clocked — the projection is
   the Fig. 6 analogue; real distributed numbers come from the dry-run).
+* region_* / stencil_halo_* / heat2d_*: fused-region and halo-vs-gather
+  comparisons (8 virtual devices in subprocesses; HLO-measured bytes).
 * kernels_*: Pallas interpret-mode kernels vs jnp oracles.
 * train_step_* / decode_step_*: smoke-size LM steps (end-to-end
   substrate sanity + µs tracking).
@@ -21,6 +26,9 @@ import numpy as np
 
 jax.config.update("jax_platforms", "cpu")
 
+# Every _row lands here; ``--json`` serialises it at exit.
+RESULTS: list[dict] = []
+
 
 def _timeit(fn, *args, warmup=2, iters=5):
     for _ in range(warmup):
@@ -33,8 +41,32 @@ def _timeit(fn, *args, warmup=2, iters=5):
     return best * 1e6  # us
 
 
+def _parse_derived(derived: str) -> dict:
+    """Split ``k=v;k=v`` derived strings into typed fields (ints/floats
+    where they parse; wire-byte counters become machine-readable)."""
+    fields: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            fields[k] = int(v)
+        except ValueError:
+            try:
+                fields[k] = float(v)
+            except ValueError:
+                fields[k] = v
+    return fields
+
+
 def _row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    RESULTS.append({
+        "name": name,
+        "us_per_call": round(float(us), 1),
+        "derived": derived,
+        **_parse_derived(derived),
+    })
 
 
 # ---------------------------------------------------------------------------
@@ -153,14 +185,15 @@ def _bench_subprocess(script: str, prefix: str, row_name: str):
             capture_output=True, text=True, env=env, timeout=560,
         )
     except subprocess.TimeoutExpired:
-        print(f"{row_name},0.0,failed:timeout", flush=True)
+        _row(row_name, 0.0, "failed:timeout")
         return
     if proc.returncode != 0:
-        print(f"{row_name},0.0,failed:{proc.stderr[-200:]!r}", flush=True)
+        _row(row_name, 0.0, f"failed:{proc.stderr[-200:]!r}")
         return
     for line in proc.stdout.splitlines():
         if line.startswith(prefix):
-            print(line, flush=True)
+            name, us, derived = line.split(",", 2)
+            _row(name, float(us), derived)
 
 
 def bench_region():
@@ -172,6 +205,12 @@ def bench_stencil_halo():
     """Cost-modeled halo boundaries vs the all-gather rule
     (EXPERIMENTS.md §Perf-D)."""
     _bench_subprocess("stencil_halo.py", "stencil_halo_", "stencil_halo")
+
+
+def bench_heat2d():
+    """2-D five-point heat: row+column halo rings vs all-gather over a
+    4x2 mesh (EXPERIMENTS.md §Perf-E)."""
+    _bench_subprocess("heat2d.py", "heat2d_", "heat2d")
 
 
 # ---------------------------------------------------------------------------
@@ -238,13 +277,51 @@ def bench_lm_steps():
         _row(f"decode_{arch}", us, "cache_len=64")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="also write the results as machine-readable JSON "
+             "(wall time + wire-byte counters per benchmark)")
+    parser.add_argument(
+        "--sections", default=None,
+        help="comma-separated subset of sections to run "
+             "(polybench,region,stencil_halo,heat2d,kernels,lm)")
+    args = parser.parse_args(argv)
+
+    sections = {
+        "polybench": bench_polybench,
+        "region": bench_region,
+        "stencil_halo": bench_stencil_halo,
+        "heat2d": bench_heat2d,
+        "kernels": bench_kernels,
+        "lm": bench_lm_steps,
+    }
+    wanted = (args.sections.split(",") if args.sections
+              else list(sections))
+    unknown = [s for s in wanted if s not in sections]
+    if unknown:
+        parser.error(f"unknown sections {unknown}; pick from "
+                     f"{sorted(sections)}")
+
     print("name,us_per_call,derived")
-    bench_polybench()
-    bench_region()
-    bench_stencil_halo()
-    bench_kernels()
-    bench_lm_steps()
+    for name in wanted:
+        sections[name]()
+
+    if args.json:
+        import json
+
+        payload = {
+            "schema": "repro-bench-v1",
+            "device_count": len(jax.devices()),
+            "sections": wanted,
+            "results": RESULTS,
+        }
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {len(RESULTS)} results to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

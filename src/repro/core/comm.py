@@ -33,10 +33,16 @@ Each decision is a :class:`BoundaryComm` carrying a :class:`CommCost`
 plus the costs of the rejected alternatives — the transformation report
 (:func:`repro.core.report.render_region`) prints them per boundary.
 
-The halo *emitter* (:func:`halo_exchange`) and the shared slab-window
-geometry (:func:`window_rows` / :func:`device_window_rows`) live here so
-the per-loop staging path (:mod:`repro.core.transform`) and the fused
-region path build byte-identical read windows.
+The halo *emitters* live here (:func:`halo_exchange` for rank-1 slabs,
+:func:`halo_exchange2` for rank-2: row-ring then column-ring shifts,
+corners riding the second pass); the shared slab-window geometry they
+build against is owned by the loop-nest IR (:mod:`repro.core.nest`,
+re-exported here) so the per-loop staging path
+(:mod:`repro.core.transform`), the fused region path and this cost
+model all address byte-identical read windows.  Rank-2 boundaries plan
+through :func:`plan_boundary2` over :class:`SlabLayout2` with per-axis
+halo windows, cost-modeled against the padded-slab all-gather exactly
+as the 1-D rule below.
 
 Window geometry (all in k-space, ``0 <= b_min <= b_max`` guaranteed by
 :mod:`repro.core.plan` eligibility): consumer chunk ``j`` reads positions
@@ -56,7 +62,16 @@ from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+# The window geometry is owned by the loop-nest IR (repro.core.nest) —
+# re-exported here so the cost model and its tests address one name; the
+# per-loop staging path and the fused region path import the same
+# functions, keeping all three byte-identical.
+from repro.core.nest import (  # noqa: F401 (re-exports)
+    device_window_rows,
+    window_extent,
+    window_rows,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -95,6 +110,60 @@ class SlabLayout:
                 and self.num_devices == ch.num_devices
                 and self.local_chunks == ch.local_chunks
                 and self.padded_trip == ch.padded_trip)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSlab:
+    """One axis of a rank-2 chunk-cyclic residency layout."""
+
+    chunk: int
+    num_devices: int
+    local_chunks: int
+    padded_trip: int
+    base: int
+    cover: int
+
+    def geometry_matches(self, ch) -> bool:
+        return (self.chunk == ch.chunk
+                and self.num_devices == ch.num_devices
+                and self.local_chunks == ch.local_chunks
+                and self.padded_trip == ch.padded_trip)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabLayout2:
+    """Rank-2 chunk-cyclic residency of one buffer between stages.
+
+    Device ``(d_i, d_j)`` holds stacks ``(n_i, c_i, n_j, c_j, *rest)``;
+    (local pair ``(q_i, q_j)``, lanes ``(r_i, r_j)``) is global cell
+    ``(bases[0] + (q_i*P_i + d_i)*c_i + r_i,
+       bases[1] + (q_j*P_j + d_j)*c_j + r_j)``.  The cover rectangle is
+    authoritative; ``has_prior`` marks a partial cover whose remaining
+    cells live in a replicated prior copy.
+    """
+
+    axes: tuple[AxisSlab, AxisSlab]
+    has_prior: bool
+
+    @classmethod
+    def of(cls, plan, *, bases: tuple[int, int], has_prior: bool) -> "SlabLayout2":
+        axs = tuple(
+            AxisSlab(ch.chunk, ch.num_devices, ch.local_chunks,
+                     ch.padded_trip, b, t)
+            for ch, b, t in zip(plan.chunks_axes, bases, plan.nest.trip_counts))
+        return cls(axs, has_prior)
+
+    @property
+    def bases(self) -> tuple[int, int]:
+        return tuple(a.base for a in self.axes)
+
+    @property
+    def covers(self) -> tuple[int, int]:
+        return tuple(a.cover for a in self.axes)
+
+    def geometry_matches(self, chunks_axes) -> bool:
+        return len(chunks_axes) == 2 and all(
+            a.geometry_matches(ch) for a, ch in zip(self.axes, chunks_axes))
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +205,8 @@ class BoundaryComm:
     cost: CommCost
     alternatives: Mapping[str, CommCost]
     reason: str
-    shift: tuple[int, int] | None = None   # (delta_min, delta_max) for halo
+    # rank-1 halo: (delta_min, delta_max); rank-2: one such pair per axis
+    shift: tuple | None = None
 
     def describe(self) -> str:
         s = (f"{self.stage} <- {self.key!r}: {self.op}"
@@ -191,6 +261,154 @@ def halo_cost(layout: SlabLayout, aval, delta_min: int,
         payload_bytes=layout.local_chunks * (left + right) * row,
         wire_bytes=wire,
         hops=(1 if left else 0) + (1 if right else 0),
+    )
+
+
+def cell_bytes(aval, lead: int = 2) -> int:
+    """Bytes of one cell of ``aval`` (everything past ``lead`` dims)."""
+    n = 1
+    for s in aval.shape[lead:]:
+        n *= s
+    return int(n) * jnp.dtype(aval.dtype).itemsize
+
+
+def gather_cost2(layout: SlabLayout2, aval, *, op: str = ALL_GATHER) -> CommCost:
+    """Ring all_gather of a rank-2 slab over both mesh axes, then a local
+    re-slice: every device receives the ``(P-1)/P`` of the padded slab it
+    lacks (P = the full 2-D mesh)."""
+    cell = cell_bytes(aval)
+    ax_i, ax_j = layout.axes
+    p = ax_i.num_devices * ax_j.num_devices
+    wire = ax_i.padded_trip * ax_j.padded_trip * cell * (p - 1)
+    return CommCost(op=op, payload_bytes=full_bytes(aval), wire_bytes=wire,
+                    hops=0)
+
+
+def halo_cost2(layout: SlabLayout2, aval, deltas) -> CommCost:
+    """Row-ring + column-ring neighbor shifts for a rank-2 window.
+
+    The row pass moves ``L_i + R_i`` lane-rows of ``c_j`` columns per
+    chunk pair; the column pass moves ``L_j + R_j`` lane-columns of the
+    *extended* ``w_i = c_i + L_i + R_i`` rows — the corner cells ride
+    the second pass (two hops, no diagonal sends).  Self-sends counted
+    too, exactly as in the 1-D model.
+    """
+    cell = cell_bytes(aval)
+    ax_i, ax_j = layout.axes
+    (dmin_i, dmax_i), (dmin_j, dmax_j) = deltas
+    li, ri = max(0, -dmin_i), max(0, dmax_i)
+    lj, rj = max(0, -dmin_j), max(0, dmax_j)
+    k_i = ax_i.local_chunks * ax_i.num_devices
+    k_j = ax_j.local_chunks * ax_j.num_devices
+    w_i = ax_i.chunk + li + ri
+    per_pair = (li + ri) * ax_j.chunk + w_i * (lj + rj)
+    wire = k_i * k_j * per_pair * cell
+    return CommCost(
+        op=HALO,
+        payload_bytes=ax_i.local_chunks * ax_j.local_chunks * per_pair * cell,
+        wire_bytes=wire,
+        hops=sum(1 for v in (li, ri, lj, rj) if v),
+    )
+
+
+def plan_boundary2(
+    *,
+    stage: str,
+    key: str,
+    layout: SlabLayout2,
+    chunks_axes,
+    trips,
+    aval,
+    in_strategy: str,
+    halo_axes,
+    shard_ndim: int,
+    needs_replicated: bool,
+    mode: str = "auto",
+) -> BoundaryComm:
+    """Rank-2 :func:`plan_boundary`: pick the cheapest feasible lowering
+    for one 2-D slab→consumer boundary (resident / row+column halo rings
+    / all_gather / replicate), by the same bytes-on-the-wire model."""
+    if mode not in COMM_MODES:
+        raise ValueError(f"unknown comm mode {mode!r}; expected {COMM_MODES}")
+    g_op = REPLICATE if needs_replicated else ALL_GATHER
+    g_cost = gather_cost2(layout, aval, op=g_op)
+    alternatives: dict[str, CommCost] = {g_op: g_cost}
+
+    if needs_replicated or in_strategy != "shard_halo":
+        return BoundaryComm(
+            stage=stage, key=key, op=REPLICATE,
+            cost=dataclasses.replace(g_cost, op=REPLICATE),
+            alternatives=alternatives,
+            reason="consumer needs the full buffer on every rank",
+        )
+    if shard_ndim != 2:
+        return BoundaryComm(
+            stage=stage, key=key, op=ALL_GATHER, cost=g_cost,
+            alternatives=alternatives,
+            reason="consumer shards only the leading axis of a 2-D slab",
+        )
+    if chunks_axes is None or not layout.geometry_matches(chunks_axes):
+        return BoundaryComm(
+            stage=stage, key=key, op=ALL_GATHER, cost=g_cost,
+            alternatives=alternatives,
+            reason="chunk geometry differs between producer and consumer",
+        )
+
+    halos = halo_axes if halo_axes is not None else ((0, 0), (0, 0))
+    deltas = tuple(
+        (h[0] - a.base, h[1] - a.base)
+        for h, a in zip(halos, layout.axes))
+
+    if all(d == (0, 0) for d in deltas) \
+            and layout.covers == tuple(trips):
+        cost = CommCost(op=RESIDENT, payload_bytes=0, wire_bytes=0, hops=0)
+        alternatives[RESIDENT] = cost
+        return BoundaryComm(
+            stage=stage, key=key, op=RESIDENT, cost=cost,
+            alternatives=alternatives,
+            reason="producer OUT layout equals consumer IN layout",
+        )
+
+    feasible = True
+    why = ""
+    for d, ((dmin, dmax), ax, h, t) in enumerate(
+            zip(deltas, layout.axes, halos, trips)):
+        left, right = max(0, -dmin), max(0, dmax)
+        if left > ax.chunk or right > ax.chunk:
+            feasible = False
+            why = (f"axis-{d} halo wider than one chunk "
+                   "(multi-hop exchange not emitted)")
+            break
+        if h[0] < ax.base and not layout.has_prior:
+            feasible = False
+            why = (f"axis-{d} window reads below the slab and no prior "
+                   "copy exists")
+            break
+        if t + h[1] > ax.base + ax.cover and not layout.has_prior:
+            feasible = False
+            why = (f"axis-{d} window reads beyond the slab cover and no "
+                   "prior copy exists")
+            break
+
+    if feasible:
+        h_cost = halo_cost2(layout, aval, deltas)
+        alternatives[HALO] = h_cost
+        if mode == "auto" and h_cost.wire_bytes < g_cost.wire_bytes:
+            return BoundaryComm(
+                stage=stage, key=key, op=HALO, cost=h_cost,
+                alternatives=alternatives,
+                reason=(f"row+column neighbor shifts move "
+                        f"{h_cost.wire_bytes} B vs {g_cost.wire_bytes} B "
+                        "for the gather"),
+                shift=deltas,
+            )
+        why = ("comm mode 'gather' pins the PR 1 baseline" if mode != "auto"
+               else f"gather is no more expensive "
+                    f"({g_cost.wire_bytes} B <= {h_cost.wire_bytes} B)")
+
+    return BoundaryComm(
+        stage=stage, key=key, op=ALL_GATHER, cost=g_cost,
+        alternatives=alternatives, reason=why,
     )
 
 
@@ -284,44 +502,50 @@ def plan_boundary(
 
 
 # ---------------------------------------------------------------------------
-# Shared slab-window geometry (per-loop staging and fused region paths
-# must build byte-identical read windows)
-# ---------------------------------------------------------------------------
-
-
-def window_extent(chunk: int, halo: tuple[int, int]) -> int:
-    """Width of one chunk's read window: ``chunk + (b_max - b_min)``."""
-    b_min, b_max = halo
-    return chunk + (b_max - b_min)
-
-
-def window_rows(ch, halo: tuple[int, int], nrows: int) -> np.ndarray:
-    """Static (jit-level) row indices of every chunk's read window:
-    ``(num_chunks, width)``, clipped in-bounds (out-of-range rows are
-    only ever consumed by masked padding lanes)."""
-    b_min, _ = halo
-    width = window_extent(ch.chunk, halo)
-    rows = (np.arange(ch.num_chunks)[:, None] * ch.chunk + b_min
-            + np.arange(width)[None, :])
-    return np.clip(rows, 0, max(0, nrows - 1))
-
-
-def device_window_rows(ch, halo: tuple[int, int], device_index,
-                       nrows: int):
-    """Traced (in-shard_map) row indices of THIS device's chunk windows:
-    ``(local_chunks, width)`` — the fused analogue of
-    :func:`window_rows` for slicing a replicated buffer locally."""
-    b_min, _ = halo
-    width = window_extent(ch.chunk, halo)
-    base = (jnp.arange(ch.local_chunks, dtype=jnp.int32)[:, None]
-            * ch.num_devices + device_index) * ch.chunk
-    rows = base + b_min + jnp.arange(width, dtype=jnp.int32)[None, :]
-    return jnp.clip(rows, 0, max(0, nrows - 1))
-
-
-# ---------------------------------------------------------------------------
 # The halo emitter (runs inside the fused shard_map)
 # ---------------------------------------------------------------------------
+
+
+def _ring_extend(stacks, *, axis: str, num_devices: int, device_index,
+                 chunk: int, delta_min: int, delta_max: int,
+                 stack_dim: int = 0, lane_dim: int = 1):
+    """Widen one chunk-cyclic axis of a resident slab into read windows
+    via neighbor ring shifts: dims ``(stack_dim, lane_dim)`` go from
+    ``(n_loc, chunk)`` to ``(n_loc, chunk + extent)``.
+
+    Chunk adjacency under the cyclic assignment: chunk ``j+1`` lives on
+    device ``d+1`` at the same local index — except on the last device,
+    where it wraps to device 0's *next* local index; symmetrically for
+    chunk ``j-1``.  Window row ``r`` of local chunk ``q`` holds slab row
+    ``j*chunk + delta_min + r`` (rows outside the producing slab are the
+    caller's to patch).
+    """
+    p, c = num_devices, chunk
+    left = max(0, -delta_min)
+    right = max(0, delta_max)
+    if left > c or right > c:
+        raise ValueError(
+            f"halo shift ({delta_min}, {delta_max}) exceeds one chunk "
+            f"(chunk={c}); the planner should have chosen a gather")
+    x = jnp.moveaxis(stacks, (stack_dim, lane_dim), (0, 1))
+    parts = []
+    if left:
+        tails = x[:, c - left:]
+        recv = jax.lax.ppermute(
+            tails, axis, perm=[((i - 1) % p, i) for i in range(p)])
+        # device 0's chunk j-1 is the last device's PREVIOUS local chunk
+        rolled = jnp.concatenate([recv[:1], recv[:-1]], axis=0)
+        parts.append(jnp.where(device_index == 0, rolled, recv))
+    parts.append(x[:, max(0, delta_min):c + min(0, delta_max)])
+    if right:
+        heads = x[:, :right]
+        recv = jax.lax.ppermute(
+            heads, axis, perm=[((i + 1) % p, i) for i in range(p)])
+        # the last device's chunk j+1 is device 0's NEXT local chunk
+        rolled = jnp.concatenate([recv[1:], recv[-1:]], axis=0)
+        parts.append(jnp.where(device_index == p - 1, rolled, recv))
+    win = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return jnp.moveaxis(win, (0, 1), (stack_dim, lane_dim))
 
 
 def halo_exchange(
@@ -347,7 +571,7 @@ def halo_exchange(
     ``(n_loc, width, *rest)`` windows whose row ``r`` holds slab row
     ``j*chunk + delta_min + r`` — exactly the layout
     :func:`device_window_rows` produces from a replicated copy, so the
-    consumer's ``_ShiftedArray`` indexing is identical on both paths.
+    consumer's ``nest.ShiftedWindow`` indexing is identical on both paths.
 
     Chunk adjacency under the cyclic assignment: chunk ``j+1`` lives on
     device ``d+1`` at the same local index — except on the last device,
@@ -357,43 +581,85 @@ def halo_exchange(
     write never touched); remaining out-of-range rows are only consumed
     by masked padding lanes.
     """
-    p = num_devices
-    c = chunk
-    left = max(0, -delta_min)
-    right = max(0, delta_max)
-    if left > c or right > c:
-        raise ValueError(
-            f"halo shift ({delta_min}, {delta_max}) exceeds one chunk "
-            f"(chunk={c}); the planner should have chosen a gather")
-
-    parts = []
-    if left:
-        tails = stacks[:, c - left:]
-        recv = jax.lax.ppermute(
-            tails, axis, perm=[((i - 1) % p, i) for i in range(p)])
-        # device 0's chunk j-1 is the last device's PREVIOUS local chunk
-        rolled = jnp.concatenate([recv[:1], recv[:-1]], axis=0)
-        parts.append(jnp.where(device_index == 0, rolled, recv))
-    parts.append(stacks[:, max(0, delta_min):c + min(0, delta_max)])
-    if right:
-        heads = stacks[:, :right]
-        recv = jax.lax.ppermute(
-            heads, axis, perm=[((i + 1) % p, i) for i in range(p)])
-        # the last device's chunk j+1 is device 0's NEXT local chunk
-        rolled = jnp.concatenate([recv[1:], recv[-1:]], axis=0)
-        parts.append(jnp.where(device_index == p - 1, rolled, recv))
-    win = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    p, c = num_devices, chunk
+    win = _ring_extend(
+        stacks, axis=axis, num_devices=p, device_index=device_index,
+        chunk=c, delta_min=delta_min, delta_max=delta_max)
 
     if prior is not None:
         n_loc, width = win.shape[0], win.shape[1]
-        j0 = (jnp.arange(n_loc, dtype=jnp.int32)[:, None] * p
-              + device_index) * c
-        rho = j0 + delta_min + jnp.arange(width, dtype=jnp.int32)[None, :]
+        rho = _window_positions(n_loc, width, p, c, device_index, delta_min)
         pos = jnp.clip(base + rho, 0, prior.shape[0] - 1)
         pvals = jnp.take(prior, pos, axis=0)
         cov = cover if cover is not None else n_loc * p * c
         inside = (rho >= 0) & (rho < cov)
         mask = inside.reshape(inside.shape + (1,) * (win.ndim - 2))
+        win = jnp.where(mask, win, pvals.astype(win.dtype))
+    if dtype is not None:
+        win = win.astype(dtype)
+    return win
+
+
+def _window_positions(n_loc, width, p, c, device_index, delta_min):
+    """k-space positions ``(n_loc, width)`` of this device's windows
+    relative to the producing slab's base."""
+    j0 = (jnp.arange(n_loc, dtype=jnp.int32)[:, None] * p
+          + device_index) * c
+    return j0 + delta_min + jnp.arange(width, dtype=jnp.int32)[None, :]
+
+
+def halo_exchange2(
+    stacks,
+    *,
+    axes: tuple[str, str],
+    num_devices: tuple[int, int],
+    device_indices,
+    chunks: tuple[int, int],
+    deltas,
+    prior=None,
+    bases: tuple[int, int] = (0, 0),
+    covers: tuple[int, int] | None = None,
+    dtype=None,
+):
+    """Rank-2 halo exchange: build each local (chunk_i, chunk_j) pair's
+    2-D read window from a resident slab via row-ring then column-ring
+    shifts.
+
+    ``stacks`` is this device's produced slab ``(n_i, c_i, n_j, c_j,
+    *rest)``; returns ``(n_i, w_i, n_j, w_j, *rest)`` windows.  The row
+    pass widens axis 0 along the ``axes[0]`` rings; the column pass then
+    widens axis 1 of the *already-extended* windows along the ``axes[1]``
+    rings — so the corner blocks travel two hops (the standard 2-D halo
+    corner treatment: no diagonal sends needed).  Positions outside the
+    slab's cover rectangle are patched from the replicated ``prior``
+    copy (the boundary rows/columns a partial write never touched).
+    """
+    (p_i, p_j) = num_devices
+    (c_i, c_j) = chunks
+    (d_i, d_j) = device_indices
+    (dmin_i, dmax_i), (dmin_j, dmax_j) = deltas
+    win = _ring_extend(
+        stacks, axis=axes[0], num_devices=p_i, device_index=d_i,
+        chunk=c_i, delta_min=dmin_i, delta_max=dmax_i,
+        stack_dim=0, lane_dim=1)
+    win = _ring_extend(
+        win, axis=axes[1], num_devices=p_j, device_index=d_j,
+        chunk=c_j, delta_min=dmin_j, delta_max=dmax_j,
+        stack_dim=2, lane_dim=3)
+
+    if prior is not None:
+        n_i, w_i, n_j, w_j = win.shape[:4]
+        rho_i = _window_positions(n_i, w_i, p_i, c_i, d_i, dmin_i)
+        rho_j = _window_positions(n_j, w_j, p_j, c_j, d_j, dmin_j)
+        pos_i = jnp.clip(bases[0] + rho_i, 0, prior.shape[0] - 1)
+        pos_j = jnp.clip(bases[1] + rho_j, 0, prior.shape[1] - 1)
+        pvals = jnp.take(prior, pos_i, axis=0)        # (n_i, w_i, N1, *)
+        pvals = jnp.take(pvals, pos_j, axis=2)        # (n_i, w_i, n_j, w_j, *)
+        cov_i = covers[0] if covers is not None else n_i * p_i * c_i
+        cov_j = covers[1] if covers is not None else n_j * p_j * c_j
+        inside = ((rho_i >= 0) & (rho_i < cov_i))[:, :, None, None] \
+            & ((rho_j >= 0) & (rho_j < cov_j))[None, None, :, :]
+        mask = inside.reshape(inside.shape + (1,) * (win.ndim - 4))
         win = jnp.where(mask, win, pvals.astype(win.dtype))
     if dtype is not None:
         win = win.astype(dtype)
@@ -408,9 +674,9 @@ def halo_exchange(
 def plan_comm(
     region,
     env: Mapping[str, Any],
-    num_devices: int,
+    num_devices: int | tuple,
     *,
-    axis: str = "data",
+    axis: str | tuple | None = None,
     comm: str = "auto",
 ) -> list[BoundaryComm]:
     """Plan every inter-loop boundary of a region: the cost-modeled
@@ -418,14 +684,24 @@ def plan_comm(
 
     Accepts a :class:`~repro.core.pragma.ParallelRegion` (or a single
     :class:`~repro.core.pragma.ParallelFor`, wrapped) plus example/aval
-    inputs; returns the decisions in stage order.  This is the planning
-    half of :func:`repro.core.region.region_to_mpi` — the same decisions
-    that lowering executes.
+    inputs; returns the decisions in stage order.  Rank-2 regions take
+    per-axis device counts, e.g. ``num_devices=(4, 2)``.  This is the
+    planning half of :func:`repro.core.region.region_to_mpi` — the same
+    decisions that lowering executes.
     """
     from repro.core import pragma
     from repro.core.region import plan_region
 
     if isinstance(region, pragma.ParallelFor):
         region = pragma.ParallelRegion((region,))
+    if region.rank == 2:
+        if axis is None:
+            axis = ("i", "j")
+        if not isinstance(num_devices, tuple):
+            raise ValueError(
+                "collapse=2 regions need per-axis device counts, "
+                f"e.g. num_devices=(4, 2); got {num_devices!r}")
+    elif axis is None:
+        axis = "data"
     rp = plan_region(region, env, num_devices, axis=axis, comm=comm)
     return rp.comms

@@ -31,6 +31,7 @@ from jax.extend import core as jcore
 
 from repro.core import pragma
 from repro.core.loop import LoopInfo, LoopNotCanonical
+from repro.core.nest import LoopNest, NestAffine
 
 
 # ---------------------------------------------------------------------------
@@ -65,26 +66,41 @@ class Affine:
         return s if self.b == 0 else f"{s}{self.b:+d}"
 
 
-def _literal_affine(x: Any) -> Affine | None:
+def _literal_int(x: Any) -> int | None:
     try:
         v = int(x)
     except (TypeError, ValueError):
         return None
     if jnp.ndim(x) != 0:
         return None
-    return Affine(0, v)
+    return v
+
+
+def _literal_affine(x: Any) -> Affine | None:
+    v = _literal_int(x)
+    return None if v is None else Affine(0, v)
 
 
 class _AffineEnv:
-    """Symbolic affine propagation over jaxpr equations."""
+    """Symbolic affine propagation over jaxpr equations.
 
-    def __init__(self, iter_var) -> None:
-        self._map: dict[Any, Affine] = {iter_var: Affine(1, 0)}
+    Works over any affine representation supporting ``+``/``-``/
+    ``scale``/``is_const``/``.b`` — :class:`Affine` for a single
+    iterator, :class:`~repro.core.nest.NestAffine` for a loop nest.
+    ``seeds`` maps iterator invars to their affine seeds; ``const``
+    builds a constant of the same representation.
+    """
+
+    def __init__(self, seeds: Mapping[Any, Any],
+                 const: Any = None) -> None:
+        self._map: dict[Any, Any] = dict(seeds)
+        self._const = const or (lambda v: Affine(0, v))
         self._producer: dict[Any, Any] = {}
 
-    def lookup(self, atom) -> Affine | None:
+    def lookup(self, atom):
         if isinstance(atom, jcore.Literal):
-            return _literal_affine(atom.val)
+            v = _literal_int(atom.val)
+            return None if v is None else self._const(v)
         return self._map.get(atom)
 
     def process(self, eqn) -> None:
@@ -181,6 +197,10 @@ class ReadInfo:
     kind: ReadKind
     affine: Affine | None = None          # leading-dim index map for SLICED
     affines: list | None = None           # all maps for STENCIL reads
+    # rank-2 nests: number of leading buffer axes read through unit
+    # slices, and the distinct per-axis NestAffine index tuples
+    slice_ndim: int = 0
+    accesses: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -190,6 +210,9 @@ class WriteInfo:
     value_shape: tuple[int, ...] = ()
     value_dtype: Any = None
     reduction_op: str | None = None
+    # rank-2 nests: per-buffer-axis NestAffine maps of the At index
+    # tuple (entries None where non-affine)
+    affines2: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -227,9 +250,13 @@ def _aval_of(x: Any) -> jax.ShapeDtypeStruct:
 
 
 def analyze_context(program: pragma.ParallelFor, env: Mapping[str, Any],
-                    loop: LoopInfo) -> ContextInfo:
+                    loop: LoopInfo | LoopNest) -> ContextInfo:
     """Run the Context Analysis stage: trace the body once with an abstract
-    iterator, then classify every env buffer from the jaxpr."""
+    iterator per nest axis, then classify every env buffer from the jaxpr."""
+    if isinstance(loop, LoopNest):
+        if loop.rank == 2:
+            return _analyze_context2(program, env, loop)
+        loop = loop.axes[0]
     env_keys = list(env.keys())
     env_avals = {k: _aval_of(v) for k, v in env.items()}
 
@@ -257,7 +284,7 @@ def analyze_context(program: pragma.ParallelFor, env: Mapping[str, Any],
     key_of_var = {id(v): k for k, v in var_of_key.items()}
 
     # --- affine propagation + read usage scan ------------------------------
-    aff = _AffineEnv(iter_var)
+    aff = _AffineEnv({iter_var: Affine(1, 0)})
     # read bookkeeping: key -> list of (eqn, affine-or-None) slice uses,
     # plus a flag for non-slice uses.
     sliced_uses: dict[str, list[Affine | None]] = {k: [] for k in env_keys}
@@ -376,6 +403,209 @@ def analyze_context(program: pragma.ParallelFor, env: Mapping[str, Any],
                                 [Affine(a, b) for a, b in uniq])
             else:
                 read = ReadInfo(ReadKind.WHOLE)
+        else:
+            read = ReadInfo(ReadKind.NONE)
+
+        write = writes.get(key, WriteInfo(WriteKind.NONE))
+        if write.kind == WriteKind.RED:
+            klass = VarClass.REDUCTION
+        elif write.kind == WriteKind.NONE:
+            klass = VarClass.IN if read.kind != ReadKind.NONE else VarClass.UNUSED
+        elif read.kind == ReadKind.NONE:
+            klass = VarClass.OUT
+        else:
+            klass = VarClass.INOUT
+        infos[key] = VarInfo(
+            name=key, read=read, write=write, klass=klass,
+            shape=tuple(shape), dtype=dtype,
+        )
+
+    return ContextInfo(vars=infos, env_keys=env_keys, update_keys=list(writes))
+
+
+# ---------------------------------------------------------------------------
+# Rank-2 nest driver (``collapse=2``)
+# ---------------------------------------------------------------------------
+
+
+def _access_prefix(starts, sizes, shape) -> int:
+    """Largest sliced prefix r in {1, 2} this dynamic_slice supports:
+    axes d < r are unit slices with affine starts; axes d >= r are
+    whole-axis slices (const-0 start) or const unit slices.  0 = neither.
+    """
+    def suffix_ok(d0: int) -> bool:
+        for d in range(d0, len(shape)):
+            a = starts[d]
+            if a is None:
+                return False
+            if sizes[d] == shape[d] and a.is_const and a.b == 0:
+                continue
+            if sizes[d] == 1 and a.is_const:
+                continue
+            return False
+        return True
+
+    for r in (2, 1):
+        if len(shape) < r or len(sizes) != len(shape):
+            continue
+        if all(sizes[d] == 1 and starts[d] is not None for d in range(r)) \
+                and suffix_ok(r):
+            return r
+    return 0
+
+
+def _analyze_context2(program: pragma.ParallelFor, env: Mapping[str, Any],
+                      nest: LoopNest) -> ContextInfo:
+    """Context Analysis over a rank-2 nest: the body is traced as
+    ``body(i, j, env)`` and every index is tracked as a
+    :class:`~repro.core.nest.NestAffine` over both iterators."""
+    env_keys = list(env.keys())
+    env_avals = {k: _aval_of(v) for k, v in env.items()}
+
+    def traced(i, j, env_arrays):
+        return program.body(i, j, env_arrays)
+
+    it_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    closed, out_shape = jax.make_jaxpr(traced, return_shape=True)(
+        it_aval, it_aval, env_avals)
+    jaxpr = closed.jaxpr
+
+    env_leaves, _ = jax.tree_util.tree_flatten(env_avals)
+    n_env = len(env_leaves)
+    sorted_keys = sorted(env_avals.keys())
+    if n_env != len(sorted_keys):
+        raise LoopNotCanonical("env values must be single arrays (no nested pytrees)")
+    if len(jaxpr.invars) != 2 + n_env:
+        raise LoopNotCanonical(
+            "collapse=2 body must take (i, j, env) with env a flat dict of "
+            f"arrays; got {len(jaxpr.invars)} invars for {n_env} env leaves"
+        )
+    iter_i, iter_j = jaxpr.invars[0], jaxpr.invars[1]
+    var_of_key = {k: jaxpr.invars[2 + pos] for pos, k in enumerate(sorted_keys)}
+    key_of_var = {id(v): k for k, v in var_of_key.items()}
+
+    aff = _AffineEnv(
+        {iter_i: NestAffine((1, 0), 0), iter_j: NestAffine((0, 1), 0)},
+        const=lambda v: NestAffine((0, 0), v))
+    # key -> list of (starts-affine-tuple, prefix r) slice uses
+    slice_uses: dict[str, list[tuple[tuple, int]]] = {k: [] for k in env_keys}
+    whole_use: dict[str, bool] = {k: False for k in env_keys}
+
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        for pos, iv in enumerate(eqn.invars):
+            key = key_of_var.get(id(iv))
+            if key is None:
+                continue
+            if prim == "dynamic_slice" and pos == 0:
+                idx_atoms = eqn.invars[1:]
+                sizes = eqn.params["slice_sizes"]
+                shape = env_avals[key].shape
+                starts = tuple(aff.lookup(at) for at in idx_atoms)
+                r = _access_prefix(starts, tuple(sizes), tuple(shape))
+                if r:
+                    slice_uses[key].append((starts[:r], r))
+                else:
+                    whole_use[key] = True
+            else:
+                whole_use[key] = True
+        aff.process(eqn)
+
+    # --- write classification ---------------------------------------------
+    flat_shapes, out_tree = jax.tree_util.tree_flatten(out_shape)
+    positions = jax.tree_util.tree_unflatten(out_tree, list(range(len(flat_shapes))))
+    outvars = jaxpr.outvars
+    if not isinstance(positions, dict):
+        raise LoopNotCanonical("body must return a dict of omp updates")
+
+    def _out_affine(pos: int):
+        atom = outvars[pos]
+        if isinstance(atom, jcore.Literal):
+            v = _literal_int(atom.val)
+            return None if v is None else NestAffine((0, 0), v)
+        return aff.lookup(atom)
+
+    writes: dict[str, WriteInfo] = {}
+    for key, upd in positions.items():
+        if isinstance(upd, pragma.At):
+            idx = upd.idx if isinstance(upd.idx, tuple) else (upd.idx,)
+            if len(idx) != 2:
+                raise LoopNotCanonical(
+                    f"{key!r}: a collapse=2 write needs omp.at((i, j), v) "
+                    f"with a 2-tuple index, got {len(idx)} indices"
+                )
+            affines2 = tuple(_out_affine(p) for p in idx)
+            vshape = flat_shapes[upd.value]
+            writes[key] = WriteInfo(
+                WriteKind.AT,
+                affines2=affines2,
+                value_shape=tuple(vshape.shape),
+                value_dtype=vshape.dtype,
+            )
+        elif isinstance(upd, pragma.Put):
+            raise LoopNotCanonical(
+                f"{key!r}: omp.put is not supported inside a collapse=2 "
+                "nest (paper §3.1.3: the block is kept as OpenMP)"
+            )
+        elif isinstance(upd, pragma.Red):
+            if key not in program.reduction:
+                raise LoopNotCanonical(
+                    f"omp.red() for {key!r} without a reduction clause "
+                    "(paper: reductions must be declared with reduction(op: var))"
+                )
+            vshape = flat_shapes[upd.value]
+            writes[key] = WriteInfo(
+                WriteKind.RED,
+                value_shape=tuple(vshape.shape),
+                value_dtype=vshape.dtype,
+                reduction_op=program.reduction[key],
+            )
+        else:
+            raise LoopNotCanonical(
+                f"update for {key!r} must be omp.at/omp.red in a collapse=2 "
+                f"nest, got {type(upd).__name__}"
+            )
+
+    for key in program.reduction:
+        if key in writes and writes[key].kind != WriteKind.RED:
+            raise LoopNotCanonical(
+                f"{key!r} is declared as a reduction but written with "
+                f"{writes[key].kind.value}"
+            )
+
+    # --- assemble per-variable classification ------------------------------
+    infos: dict[str, VarInfo] = {}
+    all_keys = list(env_keys) + [k for k in writes if k not in env_avals]
+    for key in all_keys:
+        if key in env_avals:
+            shape, dtype = env_avals[key].shape, env_avals[key].dtype
+        else:
+            w = writes[key]
+            shape, dtype = w.value_shape, w.value_dtype
+        if key in env_avals and whole_use[key]:
+            read = ReadInfo(ReadKind.WHOLE)
+        elif key in env_avals and slice_uses[key]:
+            uses = slice_uses[key]
+            r = min(u[1] for u in uses)
+            maps: list[tuple] = []
+            seen: set = set()
+            degenerate = False
+            for starts, _ in uses:
+                t = starts[:r]
+                # axes beyond the shared prefix must be serveable from a
+                # window sharded on the prefix only: const indices
+                if any(a is None or not a.is_const for a in starts[r:]):
+                    degenerate = True
+                    break
+                sig = tuple((a.coeffs, a.b) for a in t)
+                if sig not in seen:
+                    seen.add(sig)
+                    maps.append(t)
+            if degenerate:
+                read = ReadInfo(ReadKind.WHOLE)
+            else:
+                kind = ReadKind.SLICED if len(maps) == 1 else ReadKind.STENCIL
+                read = ReadInfo(kind, slice_ndim=r, accesses=tuple(maps))
         else:
             read = ReadInfo(ReadKind.NONE)
 

@@ -39,6 +39,7 @@ from repro.core import context as ctx_mod
 from repro.core import pragma, schedule
 from repro.core.context import ReadKind, VarClass, WriteKind
 from repro.core.loop import LoopInfo, LoopNotCanonical, analyze_loop
+from repro.core.nest import LoopNest, NestAffine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +61,19 @@ class KAffine:
         return self.a == 1 and self.b == 0
 
 
+def _k_axis_maps(aff: NestAffine, nest: LoopNest) -> tuple[KAffine, ...] | None:
+    """Rebase a rank-2 :class:`NestAffine` to k-space and require it to
+    follow exactly one nest axis (``a*k_d + b``); returns the per-axis
+    :class:`KAffine` view ``(axis, KAffine)``-style or None when the map
+    mixes axes (non-separable — the paper keeps such blocks as OpenMP)."""
+    k = aff.k_space(nest)
+    hits = [d for d, a in enumerate(k.coeffs) if a != 0]
+    if len(hits) > 1:
+        return None
+    d = hits[0] if hits else 0
+    return (d, KAffine(k.coeffs[d] if hits else 0, k.b))
+
+
 @dataclasses.dataclass
 class VarDecision:
     key: str
@@ -73,6 +87,13 @@ class VarDecision:
     reduction_op: str | None = None
     halo: tuple[int, int] | None = None   # (bk_min, bk_max) for stencils
     note: str = ""
+    # rank-2 nests: per-buffer-axis k-space maps and halo windows; the
+    # leading ``shard_ndim`` buffer axes are chunk-distributed (buffer
+    # axis d follows nest axis d)
+    read_maps: tuple | None = None        # per-axis KAffine (sharded axes)
+    write_maps: tuple | None = None       # per-axis KAffine for at((i,j),v)
+    halo_axes: tuple | None = None        # per-axis (b_min, b_max)
+    shard_ndim: int = 0
 
 
 @dataclasses.dataclass
@@ -81,10 +102,26 @@ class DistPlan:
     loop: LoopInfo
     chunks: schedule.ChunkPlan
     vars: dict[str, VarDecision]
-    axis: str
+    axis: str | tuple
     lowering: str
     shard_inputs: bool
     context: ctx_mod.ContextInfo
+    nest: LoopNest | None = None
+    chunks_axes: tuple = ()
+
+    def __post_init__(self) -> None:
+        if self.nest is None:
+            self.nest = LoopNest((self.loop,))
+        if not self.chunks_axes:
+            self.chunks_axes = (self.chunks,)
+
+    @property
+    def rank(self) -> int:
+        return self.nest.rank
+
+    @property
+    def axes_names(self) -> tuple[str, ...]:
+        return self.axis if isinstance(self.axis, tuple) else (self.axis,)
 
     @property
     def sharded_in_keys(self) -> list[str]:
@@ -99,15 +136,23 @@ class DistPlan:
 def make_plan(
     program: pragma.ParallelFor,
     env: Mapping[str, Any],
-    num_devices: int,
+    num_devices: int | tuple,
     *,
-    axis: str = "data",
+    axis: str | tuple = "data",
     lowering: str = "collective",
     shard_inputs: bool = False,
     paper_master_excluded: bool | None = None,
 ) -> DistPlan:
     if lowering not in ("collective", "master_worker"):
         raise ValueError(f"unknown lowering {lowering!r}")
+    if program.rank == 2:
+        return _make_plan2(
+            program, env, num_devices, axis=axis, lowering=lowering,
+            shard_inputs=shard_inputs)
+    if isinstance(axis, tuple) or isinstance(num_devices, tuple):
+        raise LoopNotCanonical(
+            "a 2-D mesh axis tuple needs a collapse=2 nest; transform "
+            "rank-1 loops over a single named axis")
     if paper_master_excluded is None:
         paper_master_excluded = lowering == "master_worker"
 
@@ -257,4 +302,159 @@ def make_plan(
         lowering=lowering,
         shard_inputs=shard_inputs,
         context=ctx,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rank-2 nests (``collapse=2``) over 2-D meshes
+# ---------------------------------------------------------------------------
+
+
+def _make_plan2(
+    program: pragma.ParallelFor,
+    env: Mapping[str, Any],
+    num_devices: int | tuple,
+    *,
+    axis: str | tuple,
+    lowering: str,
+    shard_inputs: bool,
+) -> DistPlan:
+    """Workload distribution for a rank-2 nest: buffer axis ``d`` is
+    chunk-distributed along nest axis ``d`` over mesh axis ``axis[d]``
+    (the diagonal assignment; swapped/strided maps fall back to the
+    paper's replicate/reject rules)."""
+    if lowering != "collective":
+        raise LoopNotCanonical(
+            "collapse=2 nests only lower through the collective path "
+            "(the paper's master/worker staging is rank-1 only)")
+    if not isinstance(axis, tuple) or len(axis) != 2:
+        raise ValueError(
+            f"collapse=2 needs a 2-tuple of mesh axes, got {axis!r}")
+    if not isinstance(num_devices, tuple) or len(num_devices) != 2:
+        raise ValueError(
+            f"collapse=2 needs per-axis device counts, got {num_devices!r}")
+
+    nest = LoopNest.from_program(program)
+    ctx = ctx_mod.analyze_context(program, env, nest)
+    trips = nest.trip_counts
+    total = nest.total_trip
+    chunks_axes = schedule.make_nest_chunk_plans(
+        nest, program.schedules, num_devices)
+
+    decisions: dict[str, VarDecision] = {}
+    for key, info in ctx.vars.items():
+        out_strategy = "none"
+        write_maps = None
+        note = ""
+        w = info.write
+        if w.kind == WriteKind.AT:
+            if w.affines2 is None or any(a is None for a in w.affines2):
+                raise LoopNotCanonical(
+                    f"write index of {key!r} is not an affine function of "
+                    "the iterators (paper §3.1.3: block kept as OpenMP)")
+            kmaps = [_k_axis_maps(a, nest) for a in w.affines2]
+            ok = (None not in kmaps
+                  and all(m[0] == d and m[1].a == 1
+                          for d, m in enumerate(kmaps)))
+            if not ok:
+                raise LoopNotCanonical(
+                    f"{key!r}: collapse=2 writes must be unit-stride per "
+                    "axis (x[i+b0, j+b1]); swapped or strided maps are "
+                    "kept as OpenMP blocks")
+            write_maps = tuple(m[1] for m in kmaps)
+            if len(info.shape) < 2:
+                raise LoopNotCanonical(
+                    f"{key!r}: a collapse=2 write needs a >=2-D buffer")
+            if tuple(w.value_shape) != tuple(info.shape[2:]):
+                raise LoopNotCanonical(
+                    f"{key!r}: per-iteration value shape {w.value_shape} "
+                    f"does not match buffer cell shape {info.shape[2:]}")
+            if total > 0:
+                for d in range(2):
+                    b = write_maps[d].b
+                    if b < 0 or b + trips[d] > info.shape[d]:
+                        raise LoopNotCanonical(
+                            f"{key!r}: axis-{d} write window [{b}, "
+                            f"{b + trips[d]}) out of bounds for dim "
+                            f"{info.shape[d]}")
+            if (all(m.b == 0 for m in write_maps)
+                    and tuple(info.shape[:2]) == trips):
+                out_strategy = "identity"
+            else:
+                out_strategy = "partial"
+                note = (f"rows [{write_maps[0].b}, "
+                        f"{write_maps[0].b + trips[0]}) x cols "
+                        f"[{write_maps[1].b}, {write_maps[1].b + trips[1]}) "
+                        "updated in place")
+        elif w.kind == WriteKind.RED:
+            out_strategy = "reduce"
+
+        # Input strategy: chunk-shard the leading buffer axes whose every
+        # access follows its own nest axis with unit stride; everything
+        # else replicates (the paper's master->worker full-buffer send).
+        in_strategy = "none"
+        read_maps = None
+        halo_axes = None
+        shard_ndim = 0
+        if info.read.kind == ReadKind.WHOLE:
+            in_strategy = "replicate"
+        elif info.read.kind in (ReadKind.SLICED, ReadKind.STENCIL):
+            in_strategy = "replicate"
+            r = info.read.slice_ndim
+            eligible = shard_inputs and r in (1, 2) and len(info.shape) >= r
+            k_accesses: list[tuple[KAffine, ...]] = []
+            if eligible:
+                for acc in info.read.accesses:
+                    kmaps = [_k_axis_maps(a, nest) for a in acc]
+                    if (None in kmaps
+                            or any(m[0] != d or m[1].a != 1
+                                   for d, m in enumerate(kmaps))):
+                        eligible = False
+                        break
+                    k_accesses.append(tuple(m[1] for m in kmaps))
+            if eligible:
+                halos = []
+                for d in range(r):
+                    bs = [acc[d].b for acc in k_accesses]
+                    lo, hi = min(bs), max(bs)
+                    if lo < 0 or hi + trips[d] > info.shape[d]:
+                        eligible = False
+                        break
+                    halos.append((lo, hi))
+                if eligible:
+                    in_strategy = "shard_halo"
+                    shard_ndim = r
+                    halo_axes = tuple(halos)
+                    read_maps = k_accesses[0]
+                    if any(h != (0, 0) for h in halos):
+                        note = (note + "; " if note else "") + (
+                            "halo windows " + ", ".join(
+                                f"axis{d} [{h[0]}, {h[1]}]"
+                                for d, h in enumerate(halos))
+                            + " exchanged instead of replicating")
+
+        decisions[key] = VarDecision(
+            key=key,
+            klass=info.klass,
+            in_strategy=in_strategy,
+            out_strategy=out_strategy,
+            reduction_op=w.reduction_op,
+            note=note,
+            read_maps=read_maps,
+            write_maps=write_maps,
+            halo_axes=halo_axes,
+            shard_ndim=shard_ndim,
+        )
+
+    return DistPlan(
+        name=program.name,
+        loop=nest.axes[0],
+        chunks=chunks_axes[0],
+        vars=decisions,
+        axis=axis,
+        lowering=lowering,
+        shard_inputs=shard_inputs,
+        context=ctx,
+        nest=nest,
+        chunks_axes=chunks_axes,
     )

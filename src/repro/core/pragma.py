@@ -143,8 +143,38 @@ def red(value: Any) -> Red:
 # ---------------------------------------------------------------------------
 
 
+def _axis_bounds(start, stop, step, collapse):
+    """Normalise (start, stop, step) clauses to per-axis bound triples.
+
+    ``collapse=1``: scalars only.  ``collapse=2``: each clause is either a
+    scalar (broadcast to both axes) or a 2-tuple of per-axis values — the
+    nested ``stop=`` form of the ``collapse(2)`` pragma.
+    """
+    def per_axis(v, default):
+        if v is None:
+            v = default
+        if isinstance(v, (tuple, list)):
+            if len(v) != collapse:
+                raise ValueError(
+                    f"clause {v!r} must have {collapse} entries for "
+                    f"collapse={collapse}")
+            return tuple(int(e) for e in v)
+        return (int(v),) * collapse
+
+    if stop is None:
+        raise ValueError("parallel_for requires a static 'stop' bound")
+    starts = per_axis(start, 0)
+    stops = per_axis(stop, None)
+    steps = per_axis(step, 1)
+    return tuple(zip(starts, stops, steps))
+
+
 class ParallelFor:
     """A ``#pragma omp parallel for`` block over a JAX body.
+
+    ``collapse=2`` declares a rank-2 nest (``#pragma omp parallel for
+    collapse(2)``): ``start``/``stop``/``step`` accept per-axis tuples
+    (the nested ``stop=`` bounds) and the body takes ``(i, j, env)``.
 
     Calling the object executes the *shared-memory* ("OpenMP") semantics on
     the local device — the reference against which the MPI transformation
@@ -156,24 +186,41 @@ class ParallelFor:
         self,
         body: Callable[..., Mapping[str, Any]],
         *,
-        start: int = 0,
-        stop: int | None = None,
-        step: int = 1,
+        start: int | tuple = 0,
+        stop: int | tuple | None = None,
+        step: int | tuple = 1,
+        collapse: int = 1,
         schedule: Schedule | str | None = None,
         reduction: Mapping[str, str] | None = None,
         name: str | None = None,
     ) -> None:
-        if stop is None:
-            raise ValueError("parallel_for requires a static 'stop' bound")
+        if collapse not in (1, 2):
+            raise ValueError(f"collapse must be 1 or 2, got {collapse}")
+        if collapse == 1 and any(isinstance(v, (tuple, list))
+                                 for v in (start, stop, step)):
+            raise ValueError(
+                "tuple bounds need collapse=2 (the nested-loop form)")
+        self.collapse = collapse
+        self.bounds = _axis_bounds(start, stop, step, collapse)
         if isinstance(schedule, str):
             schedule = Schedule(schedule)
         self.body = body
-        self.start = int(start)
-        self.stop = int(stop)
-        self.step = int(step)
+        # Rank-1 scalar views (the paper's single canonical loop); rank-2
+        # callers use .bounds / .schedules instead.
+        self.start, self.stop, self.step = self.bounds[0]
         self.schedule = schedule or Schedule(DYNAMIC)
         self.reduction = dict(reduction or {})
         self.name = name or getattr(body, "__name__", "parallel_for")
+
+    @property
+    def rank(self) -> int:
+        return self.collapse
+
+    @property
+    def schedules(self) -> tuple[Schedule, ...]:
+        """Per-axis schedule clauses (one shared clause, per the paper's
+        single ``schedule(...)`` on the collapsed pragma)."""
+        return (self.schedule,) * self.collapse
 
     # The single-device reference execution lives in transform.py to keep
     # the IR free of execution machinery; bound lazily to avoid a cycle.
@@ -184,22 +231,25 @@ class ParallelFor:
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         red_s = f", reduction={self.reduction}" if self.reduction else ""
+        rngs = " x ".join(f"range({s}, {e}, {t})" for s, e, t in self.bounds)
         return (
-            f"ParallelFor({self.name}, range({self.start}, {self.stop}, "
-            f"{self.step}), schedule={self.schedule.kind}{red_s})"
+            f"ParallelFor({self.name}, {rngs}, "
+            f"schedule={self.schedule.kind}{red_s})"
         )
 
 
 def parallel_for(
     *,
-    start: int = 0,
-    stop: int | None = None,
-    step: int = 1,
+    start: int | tuple = 0,
+    stop: int | tuple | None = None,
+    step: int | tuple = 1,
+    collapse: int = 1,
     schedule: Schedule | str | None = None,
     reduction: Mapping[str, str] | None = None,
     name: str | None = None,
 ) -> Callable[[Callable], ParallelFor]:
-    """Decorator form: ``@omp.parallel_for(stop=N, schedule=omp.dynamic())``."""
+    """Decorator form: ``@omp.parallel_for(stop=N, schedule=omp.dynamic())``
+    or, for a rank-2 nest, ``@omp.parallel_for(stop=(N, M), collapse=2)``."""
 
     def wrap(body: Callable) -> ParallelFor:
         return ParallelFor(
@@ -207,6 +257,7 @@ def parallel_for(
             start=start,
             stop=stop,
             step=step,
+            collapse=collapse,
             schedule=schedule,
             reduction=reduction,
             name=name,
@@ -298,6 +349,17 @@ class ParallelRegion:
     @property
     def loops(self) -> tuple[ParallelFor, ...]:
         return tuple(s for s in self.stages if isinstance(s, ParallelFor))
+
+    @property
+    def rank(self) -> int:
+        """The nest rank shared by every loop in the region (mixed-rank
+        regions cannot share one mesh decomposition)."""
+        ranks = {lp.rank for lp in self.loops}
+        if len(ranks) != 1:
+            raise ValueError(
+                f"region {self.name!r} mixes nest ranks {sorted(ranks)}; "
+                "all loops must share one collapse level")
+        return ranks.pop()
 
     def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
         out = dict(env)

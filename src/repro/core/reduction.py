@@ -75,8 +75,10 @@ def identity_like(op: ReductionOp, value: Any):
     return jnp.full(jnp.shape(value), ident, dtype=dtype)
 
 
-def cross_device_combine(op: ReductionOp, partial: Any, axis_name: str):
-    """Combine per-device partials across ``axis_name`` inside shard_map."""
+def cross_device_combine(op: ReductionOp, partial: Any,
+                         axis_name: str | tuple):
+    """Combine per-device partials across ``axis_name`` (one mesh axis,
+    or a tuple of axes for a 2-D mesh) inside shard_map."""
     if op.collective == "psum":
         return jax.lax.psum(partial, axis_name)
     if op.collective == "pmax":
@@ -84,5 +86,8 @@ def cross_device_combine(op: ReductionOp, partial: Any, axis_name: str):
     if op.collective == "pmin":
         return jax.lax.pmin(partial, axis_name)
     # '*' (and '/'): all-gather the scalar partials and fold locally.
-    gathered = jax.lax.all_gather(partial, axis_name)  # (P, ...)
-    return op.local_fold(gathered, 0)
+    names = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    out = partial
+    for nm in names:
+        out = op.local_fold(jax.lax.all_gather(out, nm), 0)  # (P, ...)
+    return out

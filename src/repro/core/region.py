@@ -58,14 +58,21 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import comm as comm_mod
+from repro.core import nest as nest_mod
 from repro.core import pragma, reduction as red_mod
 from repro.core import transform as tf
-from repro.core.comm import BoundaryComm, SlabLayout  # noqa: F401 (re-export)
+from repro.core.comm import (  # noqa: F401 (re-export)
+    BoundaryComm,
+    SlabLayout,
+    SlabLayout2,
+)
 from repro.core.loop import LoopNotCanonical
 from repro.core.plan import DistPlan, make_plan
 from repro.core.tensor_plan import slab_spec
 
 REPLICATED = "repl"
+
+_SLABS = (SlabLayout, SlabLayout2)
 
 
 @dataclasses.dataclass
@@ -98,6 +105,7 @@ class RegionPlan:
     comms: list[BoundaryComm] = dataclasses.field(default_factory=list)
     n_halo: int = 0                    # boundaries lowered to ppermute shifts
     comm_mode: str = "auto"
+    rank: int = 1                      # nest rank shared by every loop
 
     @property
     def loop_plans(self) -> list[DistPlan]:
@@ -134,21 +142,40 @@ def _aval_of(x: Any) -> jax.ShapeDtypeStruct:
 # ---------------------------------------------------------------------------
 
 
+def _boundary_replicated(stage_name, key, st, aval, comm, chunks=None):
+    """Plan a forced-replication boundary for either slab rank."""
+    if isinstance(st, SlabLayout2):
+        return comm_mod.plan_boundary2(
+            stage=stage_name, key=key, layout=st, chunks_axes=None,
+            trips=(0, 0), aval=aval, in_strategy="none", halo_axes=None,
+            shard_ndim=0, needs_replicated=True, mode=comm)
+    return comm_mod.plan_boundary(
+        stage=stage_name, key=key, layout=st, chunks=chunks, trip=0,
+        aval=aval, in_strategy="none", halo=None, needs_replicated=True,
+        mode=comm)
+
+
 def plan_region(
     region: pragma.ParallelRegion,
     env: Mapping[str, Any],
-    num_devices: int,
+    num_devices: int | tuple,
     *,
-    axis: str = "data",
+    axis: str | tuple = "data",
     comm: str = "auto",
 ) -> RegionPlan:
     """Match each loop's OUT layout against the next loop's IN needs,
     lowering each slab boundary through the cost-modeled communication
     planner (``comm="auto"``; ``comm="gather"`` pins the PR 1 all-gather
-    baseline)."""
+    baseline).  Rank-2 regions (every loop ``collapse=2``) plan over a
+    2-D mesh: ``axis`` and ``num_devices`` are then 2-tuples."""
     if comm not in comm_mod.COMM_MODES:
         raise ValueError(
             f"unknown comm mode {comm!r}; expected {comm_mod.COMM_MODES}")
+    rank = region.rank
+    if (rank == 2) != isinstance(axis, tuple):
+        raise LoopNotCanonical(
+            f"region rank {rank} does not match mesh axis clause {axis!r} "
+            "(collapse=2 regions need a 2-tuple of mesh axes)")
     env_shapes = {k: _aval_of(v) for k, v in env.items()}
     state: dict[str, Any] = {k: REPLICATED for k in env_shapes}
     touched: set[str] = set()
@@ -162,7 +189,7 @@ def plan_region(
             reads = (stage.reads if stage.reads is not None
                      else tuple(env_shapes))
             gathers = tuple(
-                k for k in reads if isinstance(state.get(k), SlabLayout))
+                k for k in reads if isinstance(state.get(k), _SLABS))
             out_sh = jax.eval_shape(stage.fn, env_shapes)
             if not isinstance(out_sh, dict):
                 raise LoopNotCanonical(
@@ -171,11 +198,8 @@ def plan_region(
                 )
             for k in gathers:
                 n_reshards += 1
-                comms.append(comm_mod.plan_boundary(
-                    stage=stage.name, key=k, layout=state[k],
-                    chunks=None, trip=0, aval=env_shapes[k],
-                    in_strategy="none", halo=None, needs_replicated=True,
-                    mode=comm))
+                comms.append(_boundary_replicated(
+                    stage.name, k, state[k], env_shapes[k], comm))
                 log.append(f"{stage.name}: reshard {k!r} "
                            f"(~{comm_mod.full_bytes(env_shapes[k])} B all-gather; "
                            "serial glue reads it)")
@@ -191,7 +215,7 @@ def plan_region(
 
         plan = make_plan(stage, env_shapes, num_devices, axis=axis,
                          lowering="collective", shard_inputs=True)
-        t = plan.loop.trip_count
+        t = plan.nest.total_trip
         if t == 0:
             # Zero-trip loop: the executor only folds reduction
             # identities (mirroring single-block ``_execute``); no other
@@ -200,14 +224,12 @@ def plan_region(
             for key, dec in plan.vars.items():
                 if dec.out_strategy != "reduce":
                     continue
-                if isinstance(state.get(key), SlabLayout):
+                if isinstance(state.get(key), _SLABS):
                     gathers0.append(key)
                     n_reshards += 1
-                    comms.append(comm_mod.plan_boundary(
-                        stage=stage.name, key=key, layout=state[key],
-                        chunks=plan.chunks, trip=0, aval=env_shapes[key],
-                        in_strategy="none", halo=None, needs_replicated=True,
-                        mode=comm))
+                    comms.append(_boundary_replicated(
+                        stage.name, key, state[key], env_shapes[key], comm,
+                        chunks=plan.chunks))
                     log.append(
                         f"{stage.name}: reshard {key!r} "
                         f"(~{comm_mod.full_bytes(env_shapes[key])} B all-gather; "
@@ -221,6 +243,14 @@ def plan_region(
             stages.append(StageExec(
                 name=stage.name, kind="loop", stage=stage, plan=plan,
                 gathers=tuple(gathers0), feeds={}))
+            continue
+        if plan.rank == 2:
+            se, n_e, n_h, n_r = _plan_loop_stage2(
+                stage, plan, state, touched, env_shapes, comms, log, comm)
+            n_elided += n_e
+            n_halo += n_h
+            n_reshards += n_r
+            stages.append(se)
             continue
         gathers: list[str] = []
         feeds: dict[str, str] = {}
@@ -303,8 +333,93 @@ def plan_region(
         stages=stages, env_keys=list(env.keys()),
         touched_keys=sorted(touched), final_layout=final_layout,
         n_elided=n_elided, n_reshards=n_reshards, log=log,
-        comms=comms, n_halo=n_halo, comm_mode=comm,
+        comms=comms, n_halo=n_halo, comm_mode=comm, rank=rank,
     )
+
+
+def _plan_loop_stage2(stage, plan, state, touched, env_shapes, comms, log,
+                      comm):
+    """Residency planning for one rank-2 loop stage: the 2-D analogue of
+    the rank-1 key loop in :func:`plan_region` (per-axis bases/covers,
+    boundaries through :func:`repro.core.comm.plan_boundary2`)."""
+    trips = plan.nest.trip_counts
+    n_elided = n_halo = n_reshards = 0
+    gathers: list[str] = []
+    feeds: dict[str, str] = {}
+    for key, dec in plan.vars.items():
+        st = state.get(key, REPLICATED)
+        is_slab = isinstance(st, SlabLayout2)
+        write_bases = (tuple(m.b for m in dec.write_maps)
+                       if dec.write_maps is not None else None)
+
+        # Out-merges that consume the pre-stage value need it replicated
+        # — except a partial write replacing a slab of the identical
+        # rectangle, whose prior chains through.
+        interval_same = (is_slab and dec.out_strategy == "partial"
+                         and st.bases == write_bases and st.covers == trips)
+        prior_repl = (
+            (dec.out_strategy == "partial" and not interval_same)
+            or (dec.out_strategy == "reduce" and key in state)
+        )
+
+        consumes = dec.in_strategy in ("shard_halo", "replicate")
+        if is_slab and (prior_repl or consumes):
+            bc = comm_mod.plan_boundary2(
+                stage=stage.name, key=key, layout=st,
+                chunks_axes=plan.chunks_axes, trips=trips,
+                aval=env_shapes[key], in_strategy=dec.in_strategy,
+                halo_axes=dec.halo_axes, shard_ndim=dec.shard_ndim,
+                needs_replicated=(prior_repl
+                                  or dec.in_strategy == "replicate"),
+                mode=comm)
+            comms.append(bc)
+            if bc.op == comm_mod.RESIDENT:
+                feeds[key] = "resident"
+                n_elided += 1
+                log.append(
+                    f"{stage.name}: {key!r} stays RESIDENT "
+                    f"(elides ~{2 * comm_mod.full_bytes(env_shapes[key])} B "
+                    "gather+redistribute round trip)")
+            elif bc.op == comm_mod.HALO:
+                feeds[key] = "halo"
+                n_halo += 1
+                g = bc.alternatives[comm_mod.ALL_GATHER].wire_bytes
+                log.append(
+                    f"{stage.name}: {key!r} HALO-EXCHANGED 2-D "
+                    f"(shifts {bc.shift}, {bc.cost.hops} ppermute hop(s), "
+                    f"~{bc.cost.wire_bytes} B on the wire vs ~{g} B "
+                    "all-gather)")
+            else:
+                gathers.append(key)
+                n_reshards += 1
+                state[key] = REPLICATED
+                log.append(
+                    f"{stage.name}: reshard {key!r} "
+                    f"(~{comm_mod.full_bytes(env_shapes[key])} B all-gather; "
+                    f"{bc.reason})")
+                if dec.in_strategy == "shard_halo":
+                    feeds[key] = "slice"
+        elif dec.in_strategy == "shard_halo":
+            feeds[key] = "slice"
+
+        if dec.out_strategy == "identity":
+            state[key] = SlabLayout2.of(plan, bases=(0, 0), has_prior=False)
+            touched.add(key)
+        elif dec.out_strategy == "partial":
+            state[key] = SlabLayout2.of(plan, bases=write_bases,
+                                        has_prior=True)
+            touched.add(key)
+        elif dec.out_strategy == "reduce":
+            state[key] = REPLICATED
+            touched.add(key)
+            if key not in env_shapes:     # fresh reduction output
+                info = plan.context.vars[key]
+                env_shapes[key] = jax.ShapeDtypeStruct(
+                    info.write.value_shape, info.write.value_dtype)
+
+    se = StageExec(name=stage.name, kind="loop", stage=stage, plan=plan,
+                   gathers=tuple(gathers), feeds=feeds)
+    return se, n_elided, n_halo, n_reshards
 
 
 # ---------------------------------------------------------------------------
@@ -333,8 +448,8 @@ class DistributedRegion:
             return self._run_staged(env)
         if self.plan is None:
             self.plan = plan_region(
-                self.region, env, self.mesh.shape[self.axis], axis=self.axis,
-                comm=self.comm)
+                self.region, env, tf.mesh_axis_sizes(self.mesh, self.axis),
+                axis=self.axis, comm=self.comm)
         return _execute_region(self, env)
 
     def _run_staged(self, env: dict) -> dict:
@@ -367,7 +482,7 @@ def region_to_mpi(
     region: pragma.ParallelRegion,
     mesh: Mesh,
     *,
-    axis: str = "data",
+    axis: str | tuple | None = None,
     lowering: str = "collective",
     fuse: bool = True,
     shard_inputs: bool = False,
@@ -383,6 +498,10 @@ def region_to_mpi(
     ``lowering="master_worker"`` stage each loop in isolation — the
     paper's per-loop pattern, kept as the measurable baseline.
 
+    A rank-2 region (every loop ``collapse=2``) distributes over a 2-D
+    mesh: ``axis`` is a 2-tuple of mesh axes, defaulting to
+    ``("i", "j")`` when present.
+
     ``comm`` selects the boundary planner mode: ``"auto"`` (default)
     lowers each slab boundary to the cheapest of resident / halo
     ``ppermute`` / all_gather / replicate by the
@@ -391,19 +510,21 @@ def region_to_mpi(
     """
     if isinstance(region, pragma.ParallelFor):
         region = pragma.ParallelRegion((region,))
-    if axis not in mesh.axis_names:
-        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
+    axis, num = tf.resolve_axes(region, mesh, axis)
     if lowering not in ("collective", "master_worker"):
         raise ValueError(f"unknown lowering {lowering!r}")
     if comm not in comm_mod.COMM_MODES:
         raise ValueError(
             f"unknown comm mode {comm!r}; expected {comm_mod.COMM_MODES}")
     if lowering == "master_worker":
+        if region.rank == 2:
+            raise LoopNotCanonical(
+                "collapse=2 regions only lower through the collective "
+                "path (the paper's master/worker staging is rank-1 only)")
         fuse = False
     plan = None
     if env_like is not None and lowering == "collective" and fuse:
-        plan = plan_region(region, env_like, mesh.shape[axis], axis=axis,
-                           comm=comm)
+        plan = plan_region(region, env_like, num, axis=axis, comm=comm)
     return DistributedRegion(
         region=region, mesh=mesh, plan=plan, axis=axis, lowering=lowering,
         fuse=fuse, shard_inputs=shard_inputs, unroll_chunks=unroll_chunks,
@@ -416,17 +537,9 @@ def region_to_mpi(
 # ---------------------------------------------------------------------------
 
 
-def _local_slabs(x, plan: DistPlan, dec, d):
-    """Slice THIS device's chunk slabs out of a replicated buffer —
-    pure local indexing, the fused analogue of the jit-level
-    ``_pad_reshape``/``_halo_slabs`` staging (same shared window
-    geometry: :func:`repro.core.comm.device_window_rows`)."""
-    halo = dec.halo if dec.halo is not None else (0, 0)
-    rows = comm_mod.device_window_rows(plan.chunks, halo, d, x.shape[0])
-    return jnp.take(x, rows, axis=0)        # (n_loc, width, *rest)
-
-
 def _execute_region(dr: DistributedRegion, env: dict) -> dict:
+    if dr.plan.rank == 2:
+        return _execute_region2(dr, env)
     rp = dr.plan
     mesh, axis = dr.mesh, rp.axis
     env_dtypes = {k: v.dtype for k, v in env.items()}
@@ -503,8 +616,9 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
                             prior=sprior, base=sbase, cover=scover,
                             dtype=sdtype)
                     else:
-                        slab_stacks[key] = _local_slabs(
-                            st[key][1], plan, dec, d)
+                        halo = dec.halo if dec.halo is not None else (0, 0)
+                        slab_stacks[key] = nest_mod.local_slabs(
+                            st[key][1], plan.chunks, halo, d)
                 elif dec.in_strategy == "replicate":
                     env_in[key] = st[key][1]
 
@@ -574,6 +688,169 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
         if lay.has_prior:
             result[key] = jax.lax.dynamic_update_slice_in_dim(
                 outs_prior[key], flat, lay.base, 0)
+        else:
+            result[key] = flat
+    return result
+
+
+def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
+    """Fused execution of a rank-2 region: ONE shard_map over the 2-D
+    mesh; slabs stay resident as ``(n_i, c_i, n_j, c_j, *rest)`` stacks,
+    halo boundaries run as row+column ``ppermute`` rings."""
+    rp = dr.plan
+    mesh = dr.mesh
+    ax_i, ax_j = rp.axis
+    env_dtypes = {k: v.dtype for k, v in env.items()}
+
+    slab_out = {k: lay for k, lay in rp.final_layout.items()
+                if isinstance(lay, SlabLayout2)}
+    repl_out = [k for k, lay in rp.final_layout.items() if lay == REPLICATED]
+    prior_out = [k for k, lay in slab_out.items() if lay.has_prior]
+
+    def device_fn(env_all):
+        d_i = jax.lax.axis_index(ax_i)
+        d_j = jax.lax.axis_index(ax_j)
+        st: dict[str, tuple] = {k: ("repl", v) for k, v in env_all.items()}
+
+        def materialize(key):
+            tag = st[key][0]
+            if tag == "repl":
+                return st[key][1]
+            _, stacks, bases, covers, prior, dtype = st[key]
+            g = jax.lax.all_gather(stacks, ax_i, axis=1, tiled=False)
+            g = jax.lax.all_gather(g, ax_j, axis=4, tiled=False)
+            flat = g.reshape(
+                (g.shape[0] * g.shape[1] * g.shape[2],
+                 g.shape[3] * g.shape[4] * g.shape[5]) + g.shape[6:])
+            flat = flat[:covers[0], :covers[1]].astype(dtype)
+            if prior is None:
+                full = flat
+            else:
+                full = jax.lax.dynamic_update_slice(
+                    prior, flat, bases + (0,) * (flat.ndim - 2))
+            st[key] = ("repl", full)
+            return full
+
+        for se in rp.stages:
+            for k in se.gathers:
+                materialize(k)
+
+            if se.kind == "serial":
+                env_full = {k: e[1] for k, e in st.items() if e[0] == "repl"}
+                upd = se.stage.fn(env_full)
+                for k, v in upd.items():
+                    st[k] = ("repl", jnp.asarray(v))
+                continue
+
+            plan = se.plan
+            ch_i, ch_j = plan.chunks_axes
+            trips = plan.nest.trip_counts
+            if plan.nest.total_trip == 0:
+                for key, dec in plan.vars.items():
+                    if dec.out_strategy == "reduce":
+                        rop = red_mod.get_reduction(dec.reduction_op)
+                        info = plan.context.vars[key]
+                        val = red_mod.identity_like(
+                            rop, jnp.zeros(info.write.value_shape,
+                                           info.write.value_dtype))
+                        if key in st:
+                            val = rop.pairwise(materialize(key), val)
+                        st[key] = ("repl", val)
+                continue
+
+            env_in: dict[str, Any] = {}
+            slab_stacks: dict[str, Any] = {}
+            for key in plan.context.env_keys:
+                dec = plan.vars[key]
+                if dec.in_strategy == "shard_halo":
+                    feed = se.feeds[key]
+                    if feed == "resident":
+                        slab_stacks[key] = st[key][1]
+                    elif feed == "halo":
+                        _, stacks, bases, covers, prior, dtype = st[key]
+                        halos = dec.halo_axes
+                        slab_stacks[key] = comm_mod.halo_exchange2(
+                            stacks, axes=(ax_i, ax_j),
+                            num_devices=(ch_i.num_devices, ch_j.num_devices),
+                            device_indices=(d_i, d_j),
+                            chunks=(ch_i.chunk, ch_j.chunk),
+                            deltas=tuple(
+                                (h[0] - b, h[1] - b)
+                                for h, b in zip(halos, bases)),
+                            prior=prior, bases=bases, covers=covers,
+                            dtype=dtype)
+                    else:
+                        halos = (dec.halo_axes if dec.halo_axes is not None
+                                 else ((0, 0), (0, 0)))
+                        x = st[key][1]
+                        if dec.shard_ndim == 2:
+                            slab_stacks[key] = nest_mod.local_slabs2(
+                                x, (ch_i, ch_j), halos, (d_i, d_j))
+                        else:
+                            slab_stacks[key] = nest_mod.local_slabs(
+                                x, ch_i, halos[0], d_i)
+                elif dec.in_strategy == "replicate":
+                    env_in[key] = st[key][1]
+
+            carry, ys = tf._run_local_chunks2(
+                plan, se.stage, env_in, slab_stacks, (d_i, d_j),
+                dr.unroll_chunks)
+
+            for key, dec in plan.vars.items():
+                info = plan.context.vars[key]
+                if dec.out_strategy == "identity":
+                    st[key] = ("slab2", ys[key], (0, 0), trips, None,
+                               info.dtype)
+                elif dec.out_strategy == "partial":
+                    bases = tuple(m.b for m in dec.write_maps)
+                    prev = st.get(key)
+                    if (prev is not None and prev[0] == "slab2"
+                            and prev[2] == bases and prev[3] == trips):
+                        prior = prev[4]     # same rectangle: chain the prior
+                    else:
+                        prior = st[key][1]  # replicated (planner enforced)
+                    st[key] = ("slab2", ys[key], bases, trips, prior,
+                               info.dtype)
+                elif dec.out_strategy == "reduce":
+                    rop = red_mod.get_reduction(dec.reduction_op)
+                    val = red_mod.cross_device_combine(
+                        rop, carry[key], (ax_i, ax_j))
+                    if key in st:
+                        val = rop.pairwise(st[key][1], val)
+                    st[key] = ("repl", val)
+
+        outs_repl = {k: st[k][1] for k in repl_out}
+        outs_slab = {k: st[k][1][:, None, :, :, None] for k in slab_out}
+        outs_prior = {k: st[k][4] for k in prior_out}
+        return outs_repl, outs_slab, outs_prior
+
+    in_specs = ({k: P() for k in env},)
+    out_specs = (
+        {k: P() for k in repl_out},
+        {k: slab_spec((ax_i, ax_j)) for k in slab_out},
+        {k: P() for k in prior_out},
+    )
+    if not rp.touched_keys:
+        return dict(env)
+
+    outs_repl, outs_slab, outs_prior = shard_map(
+        device_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    )(env)
+
+    # --- reassembly at the jit level (layout, not messages) ---------------
+    result = dict(env)
+    for key in repl_out:
+        result[key] = outs_repl[key]
+    for key, lay in slab_out.items():
+        g = outs_slab[key]               # (n_i, P_i, c_i, n_j, P_j, c_j, *)
+        flat = g.reshape(
+            (g.shape[0] * g.shape[1] * g.shape[2],
+             g.shape[3] * g.shape[4] * g.shape[5]) + g.shape[6:])
+        flat = flat[:lay.covers[0], :lay.covers[1]]
+        flat = flat.astype(env_dtypes.get(key, flat.dtype))
+        if lay.has_prior:
+            result[key] = jax.lax.dynamic_update_slice(
+                outs_prior[key], flat, lay.bases + (0,) * (flat.ndim - 2))
         else:
             result[key] = flat
     return result

@@ -39,13 +39,35 @@ def render_plan(plan: DistPlan) -> str:
     lines = [
         f"=== OMP2MPI transformation report: {plan.name} ===",
         f"lowering        : {plan.lowering}",
-        f"mesh axis       : {plan.axis!r} ({ch.num_devices} compute ranks)",
-        f"loop            : for i in range({plan.loop.start}, {plan.loop.stop}, "
-        f"{plan.loop.step})  [{plan.loop.trip_count} iterations]",
-        f"chunk (partSize): {ch.chunk}  "
-        f"[paper Table 2 line 4: N / ranks / 10 for schedule(dynamic)]",
-        f"chunks          : {ch.num_chunks} total, {ch.local_chunks} per rank, "
-        f"cyclic assignment chunk j -> rank j % {ch.num_devices}",
+    ]
+    if plan.rank == 2:
+        names = ("i", "j")
+        ranks = " x ".join(f"{c.num_devices}" for c in plan.chunks_axes)
+        lines.append(
+            f"mesh axes       : {plan.axis!r} ({ranks} compute ranks, "
+            "2-D decomposition)")
+        for d, (lp, cd) in enumerate(zip(plan.nest.axes, plan.chunks_axes)):
+            lines.append(
+                f"loop axis {names[d]}     : for {names[d]} in "
+                f"range({lp.start}, {lp.stop}, {lp.step})  "
+                f"[{lp.trip_count} iterations]")
+            lines.append(
+                f"chunk axis {names[d]}    : partSize={cd.chunk}, "
+                f"{cd.num_chunks} chunks total ({cd.local_chunks} per rank), "
+                f"cyclic chunk q -> rank q % {cd.num_devices}")
+    else:
+        lines += [
+            f"mesh axis       : {plan.axis!r} ({ch.num_devices} compute ranks)",
+            f"loop            : for i in range({plan.loop.start}, "
+            f"{plan.loop.stop}, {plan.loop.step})  "
+            f"[{plan.loop.trip_count} iterations]",
+            f"chunk (partSize): {ch.chunk}  "
+            f"[paper Table 2 line 4: N / ranks / 10 for schedule(dynamic)]",
+            f"chunks          : {ch.num_chunks} total, {ch.local_chunks} "
+            f"per rank, cyclic assignment chunk j -> rank j % "
+            f"{ch.num_devices}",
+        ]
+    lines += [
         "",
         "variable classification (Context Analysis, paper Fig. 3):",
     ]
@@ -61,6 +83,19 @@ def render_plan(plan: DistPlan) -> str:
         if dec.write_map is not None:
             lines.append(f"  {'':>12s}  write map: x[{dec.write_map.a}*k"
                          f"{dec.write_map.b:+d}]")
+        if dec.read_maps is not None:
+            inner = ", ".join(f"{m.a}*k{d}{m.b:+d}"
+                              for d, m in zip("ij", dec.read_maps))
+            lines.append(f"  {'':>12s}  read map : x[{inner}]")
+        if dec.write_maps is not None:
+            inner = ", ".join(f"{m.a}*k{d}{m.b:+d}"
+                              for d, m in zip("ij", dec.write_maps))
+            lines.append(f"  {'':>12s}  write map: x[{inner}]")
+        if dec.halo_axes is not None and any(
+                h != (0, 0) for h in dec.halo_axes):
+            inner = ", ".join(f"axis{d} [{h[0]}, {h[1]}]"
+                              for d, h in enumerate(dec.halo_axes))
+            lines.append(f"  {'':>12s}  halo     : {inner}")
         if dec.reduction_op:
             lines.append(f"  {'':>12s}  reduction: op={dec.reduction_op!r} "
                          f"(identity init, paper Table 3)")
@@ -82,7 +117,7 @@ def render_region(rp) -> str:
     """Render a :class:`~repro.core.region.RegionPlan` — the whole-program
     analogue of the per-block report: stage roster, the residency
     planner's transition journal, and the staged-vs-fused comparison."""
-    from repro.core.region import REPLICATED, SlabLayout
+    from repro.core.region import REPLICATED, SlabLayout, SlabLayout2
 
     lines = [
         f"=== ParallelRegion transformation report: {rp.name} ===",
@@ -97,6 +132,13 @@ def render_region(rp) -> str:
         if s.kind == "serial":
             lines.append(f"  {s.name:>16s}  serial glue "
                          f"(writes {list(s.serial_writes)})")
+        elif s.plan.rank == 2:
+            trips = s.plan.nest.trip_counts
+            chs = s.plan.chunks_axes
+            lines.append(
+                f"  {s.name:>16s}  loop nest t={trips[0]}x{trips[1]} "
+                f"chunks={chs[0].chunk}x{chs[1].chunk} "
+                f"({chs[0].num_chunks}x{chs[1].num_chunks} tiles cyclic)")
         else:
             ch = s.plan.chunks
             lines.append(
@@ -144,6 +186,12 @@ def render_region(rp) -> str:
     for key, lay in rp.final_layout.items():
         if lay == REPLICATED:
             lines.append(f"  {key:>16s}: replicated")
+        elif isinstance(lay, SlabLayout2):
+            (bi, bj), (ci, cj) = lay.bases, lay.covers
+            lines.append(
+                f"  {key:>16s}: 2-D chunk-cyclic slab "
+                f"rows [{bi}, {bi + ci}) x cols [{bj}, {bj + cj}) "
+                f"(reassembled by layout at exit)")
         else:
             assert isinstance(lay, SlabLayout)
             lines.append(
@@ -172,6 +220,8 @@ def _comm_summary(plan: DistPlan) -> list[str]:
 
 def _comm_breakdown(plan: DistPlan) -> tuple[list[str], int]:
     """Per-variable traffic lines plus the numeric total."""
+    if plan.rank == 2:
+        return _comm_breakdown2(plan)
     ch = plan.chunks
     out = []
     total = 0
@@ -215,6 +265,50 @@ def _comm_breakdown(plan: DistPlan) -> tuple[list[str], int]:
             rb = _bytes_of(info.write.value_shape, info.write.value_dtype)
             moved += rb * ch.num_devices
             parts.append(f"out: {ch.num_devices} partials x {rb} B")
+        if parts:
+            out.append(f"  {key:>12s}: " + "; ".join(parts))
+        total += moved
+    return out, total
+
+
+def _comm_breakdown2(plan: DistPlan) -> tuple[list[str], int]:
+    """Rank-2 traffic estimate: per-axis chunk windows instead of the
+    1-D slab rows (same MPI-terms accounting)."""
+    ch_i, ch_j = plan.chunks_axes
+    out = []
+    total = 0
+    for key, dec in plan.vars.items():
+        info = plan.context.vars[key]
+        b = _bytes_of(info.shape, info.dtype)
+        cell = _bytes_of(info.shape[2:], info.dtype) if len(info.shape) >= 2 \
+            else b
+        moved = 0
+        parts = []
+        if dec.in_strategy == "replicate":
+            moved += b
+            parts.append(f"in: broadcast {b} B")
+        elif dec.in_strategy == "shard_halo":
+            halos = dec.halo_axes or ((0, 0),)
+            w_i = ch_i.chunk + halos[0][1] - halos[0][0]
+            if dec.shard_ndim == 2:
+                w_j = ch_j.chunk + halos[1][1] - halos[1][0]
+                sl = cell * w_i * w_j * ch_i.num_chunks * ch_j.num_chunks
+            else:
+                row = _bytes_of(info.shape[1:], info.dtype)
+                sl = row * w_i * ch_i.num_chunks
+            moved += sl
+            parts.append(f"in: 2-D chunk windows {sl} B total "
+                         f"(vs {b * ch_i.num_devices * ch_j.num_devices} B "
+                         "broadcast)")
+        if dec.out_strategy in ("identity", "partial"):
+            sl = cell * ch_i.padded_trip * ch_j.padded_trip
+            moved += sl
+            parts.append(f"out: chunk tiles {sl} B total")
+        elif dec.out_strategy == "reduce":
+            rb = _bytes_of(info.write.value_shape, info.write.value_dtype)
+            p = ch_i.num_devices * ch_j.num_devices
+            moved += rb * p
+            parts.append(f"out: {p} partials x {rb} B")
         if parts:
             out.append(f"  {key:>12s}: " + "; ".join(parts))
         total += moved

@@ -76,6 +76,21 @@ def guided_chunk_size(trip_count: int, ranks: int) -> int:
     return max(1, trip_count // max(1, 2 * ranks))
 
 
+def make_nest_chunk_plans(nest, schedules, num_devices) -> tuple[ChunkPlan, ...]:
+    """Per-axis chunk plans for a loop nest: axis ``d`` of the iteration
+    space is dealt over ``num_devices[d]`` mesh ranks with its own
+    schedule clause — the ``collapse(2)`` generalisation of the paper's
+    single ``partSize`` split (each axis keeps the Table 2 chunking math
+    against its own trip count and rank count)."""
+    if not (len(nest.axes) == len(schedules) == len(num_devices)):
+        raise ValueError(
+            f"nest rank {len(nest.axes)} needs matching schedules "
+            f"({len(schedules)}) and device counts ({len(num_devices)})")
+    return tuple(
+        make_chunk_plan(loop_d, sched_d, int(p_d))
+        for loop_d, sched_d, p_d in zip(nest.axes, schedules, num_devices))
+
+
 def make_chunk_plan(
     loop: LoopInfo,
     schedule: pragma.Schedule,

@@ -110,16 +110,24 @@ class TensorPlan:
         )
 
 
-def slab_spec(mesh_axis: str) -> P:
-    """PartitionSpec of a chunk-cyclic loop slab ``(n_loc, P, c, *rest)``.
+def slab_spec(mesh_axis: str | tuple) -> P:
+    """PartitionSpec of a chunk-cyclic loop slab.
 
-    The explicit-loop planner (:mod:`repro.core.plan`) and the region
-    residency planner (:mod:`repro.core.region`) both park distributed
-    buffers in this layout: the middle dim *is* the device axis, so a
-    "chunk-distributed array" is an ordinary sharded tensor in the
-    tensor-plan vocabulary — the bridge that lets loop-level residency
-    compose with model-level sharding on one mesh.
+    Rank-1 slabs are ``(n_loc, P, c, *rest)`` over one mesh axis; a
+    rank-2 nest over a 2-D mesh (``mesh_axis=("i", "j")``) parks its
+    slabs as ``(n_i, P_i, c_i, n_j, P_j, c_j, *rest)`` — every third
+    dim is a device axis.  The explicit-loop planner
+    (:mod:`repro.core.plan`) and the region residency planner
+    (:mod:`repro.core.region`) both park distributed buffers in this
+    layout: the device dims make a "chunk-distributed array" an ordinary
+    sharded tensor in the tensor-plan vocabulary — the bridge that lets
+    loop-level residency compose with model-level sharding on one mesh.
     """
+    if isinstance(mesh_axis, tuple):
+        if len(mesh_axis) != 2:
+            raise ValueError(
+                f"slab_spec takes one axis or a 2-tuple, got {mesh_axis!r}")
+        return P(None, mesh_axis[0], None, None, mesh_axis[1], None)
     return P(None, mesh_axis)
 
 

@@ -39,10 +39,11 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import comm as comm_mod
+from repro.core import nest as nest_mod
 from repro.core import pragma, reduction as red_mod
 from repro.core.context import ReadKind, VarClass, WriteKind
 from repro.core.loop import LoopNotCanonical, analyze_loop
+from repro.core.nest import LoopNest, ShiftedWindow, SubstitutionFailed  # noqa: F401 (re-export)
 from repro.core.plan import DistPlan, make_plan
 
 
@@ -58,6 +59,8 @@ def run_reference(program: pragma.ParallelFor, env: Mapping[str, Any]) -> dict:
     OpenMP; racy read-after-write across iterations is UB there and
     unsupported here — see DESIGN.md).
     """
+    if program.rank == 2:
+        return _run_reference2(program, env)
     loop = analyze_loop(program.start, program.stop, program.step)
     env = {k: jnp.asarray(v) for k, v in env.items()}
     out = dict(env)
@@ -100,49 +103,45 @@ def run_reference(program: pragma.ParallelFor, env: Mapping[str, Any]) -> dict:
     return out
 
 
-# ---------------------------------------------------------------------------
-# Sliced-read substitution (paper: send only the needed slice)
-# ---------------------------------------------------------------------------
+def _run_reference2(program: pragma.ParallelFor, env: Mapping[str, Any]) -> dict:
+    """Shared-memory reference for a ``collapse=2`` nest: the body is
+    vmapped over the full cross product of both iteration spaces."""
+    nest = LoopNest.from_program(program)
+    env = {k: jnp.asarray(v) for k, v in env.items()}
+    out = dict(env)
+    t_i, t_j = nest.trip_counts
+    if t_i == 0 or t_j == 0:
+        fresh = [k for k in program.reduction if k not in out]
+        if fresh:
+            zero = jax.ShapeDtypeStruct((), jnp.int32)
+            upds = jax.eval_shape(program.body, zero, zero, env)
+            for key in fresh:
+                rop = red_mod.get_reduction(program.reduction[key])
+                out[key] = red_mod.identity_like(
+                    rop, jnp.zeros(upds[key].value.shape,
+                                   upds[key].value.dtype))
+        return out
 
-
-class SubstitutionFailed(Exception):
-    pass
-
-
-class _ShiftedArray:
-    """Stands in for a shared buffer whose only accesses are ``x[i]``-style
-    identity reads; serves them from the local chunk slab instead."""
-
-    def __init__(self, slab, k_offset, virtual_shape, dtype):
-        self._slab = slab
-        self._k0 = k_offset
-        self.shape = virtual_shape
-        self.dtype = dtype
-        self.ndim = len(virtual_shape)
-
-    def __getitem__(self, idx):
-        if isinstance(idx, tuple):
-            first, rest = idx[0], tuple(idx[1:])
+    ax_i, ax_j = nest.axes
+    ivec = ax_i.start + ax_i.step * jnp.arange(t_i, dtype=jnp.int32)
+    jvec = ax_j.start + ax_j.step * jnp.arange(t_j, dtype=jnp.int32)
+    updates = jax.vmap(
+        lambda i: jax.vmap(lambda j: program.body(i, j, env))(jvec))(ivec)
+    for key, upd in updates.items():
+        if isinstance(upd, pragma.At):
+            out[key] = out[key].at[upd.idx].set(upd.value)
+        elif isinstance(upd, pragma.Red):
+            rop = red_mod.get_reduction(program.reduction[key])
+            folded = rop.local_fold(upd.value, (0, 1))
+            if key in env:
+                folded = rop.pairwise(env[key], folded)
+            out[key] = folded
         else:
-            first, rest = idx, ()
-        row = jax.lax.dynamic_index_in_dim(
-            self._slab, jnp.asarray(first - self._k0, jnp.int32), 0,
-            keepdims=False,
-        )
-        return row[rest] if rest else row
-
-    def __len__(self):
-        return self.shape[0]
-
-    def _no(self, *a, **k):  # pragma: no cover - guard path
-        raise SubstitutionFailed(
-            "sliced-read substitution saw a non-getitem use; this buffer "
-            "should have been classified as a whole-array read"
-        )
-
-    __add__ = __radd__ = __mul__ = __rmul__ = __sub__ = __rsub__ = _no
-    __truediv__ = __rtruediv__ = __matmul__ = __rmatmul__ = _no
-    __neg__ = __pow__ = __array__ = _no
+            raise LoopNotCanonical(
+                f"update for {key!r} must be omp.at/omp.red in a "
+                "collapse=2 nest"
+            )
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -176,11 +175,53 @@ class DistributedProgram:
         return report_mod.render_plan(self.plan)
 
 
+def resolve_axes(program_or_rank, mesh: Mesh, axis):
+    """Resolve the mesh-axis clause against the program's nest rank.
+
+    Returns ``(axis, num_devices)`` — scalars for rank-1, matching
+    2-tuples for rank-2 (defaulting to ``("i", "j")`` when present in
+    the mesh, else the first two mesh axes).
+    """
+    rank = (program_or_rank if isinstance(program_or_rank, int)
+            else program_or_rank.rank)
+    names = tuple(mesh.axis_names)
+    if rank == 2:
+        if axis is None:
+            if "i" in names and "j" in names:
+                axis = ("i", "j")
+            elif len(names) >= 2:
+                axis = names[:2]
+            else:
+                raise ValueError(
+                    f"collapse=2 needs a 2-D mesh; got axes {names}")
+        if not isinstance(axis, tuple) or len(axis) != 2 \
+                or axis[0] == axis[1]:
+            raise ValueError(
+                f"collapse=2 needs two distinct mesh axes, got {axis!r}")
+        for a in axis:
+            if a not in names:
+                raise ValueError(f"axis {a!r} not in mesh axes {names}")
+        return axis, tuple(int(mesh.shape[a]) for a in axis)
+    if axis is None:
+        axis = "data"
+    if axis not in names:
+        raise ValueError(f"axis {axis!r} not in mesh axes {names}")
+    return axis, mesh.shape[axis]
+
+
+def mesh_axis_sizes(mesh: Mesh, axis):
+    """Device count(s) along an already-resolved axis clause: a scalar
+    for one named axis, a matching tuple for a rank-2 axis pair."""
+    if isinstance(axis, tuple):
+        return tuple(int(mesh.shape[a]) for a in axis)
+    return mesh.shape[axis]
+
+
 def to_mpi(
     program: pragma.ParallelFor,
     mesh: Mesh,
     *,
-    axis: str = "data",
+    axis: str | tuple | None = None,
     lowering: str = "collective",
     shard_inputs: bool = False,
     keep_sharded: bool = False,
@@ -190,12 +231,13 @@ def to_mpi(
 ) -> DistributedProgram:
     """Transform an OpenMP-annotated block into a distributed program.
 
-    ``env_like`` (shapes only) lets the plan be built eagerly; otherwise it
-    is built on first call.
+    A ``collapse=2`` nest takes a 2-tuple of mesh axes (nest axis ``d``
+    is dealt over ``axis[d]``); the default is ``("i", "j")`` when both
+    exist in the mesh, else the first two mesh axes.  ``env_like``
+    (shapes only) lets the plan be built eagerly; otherwise it is built
+    on first call.
     """
-    if axis not in mesh.axis_names:
-        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
-    num = mesh.shape[axis]
+    axis, num = resolve_axes(program, mesh, axis)
     plan = None
     if env_like is not None:
         plan = make_plan(
@@ -216,48 +258,16 @@ def to_mpi(
 # ---------------------------------------------------------------------------
 
 
-def _pad_reshape(x, plan):
-    """(T, *rest) -> (n_loc, P_compute, c, *rest) chunk-cyclic layout."""
-    ch = plan.chunks
-    pad = ch.padded_trip - x.shape[0]
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
-    return x.reshape((ch.local_chunks, ch.num_devices, ch.chunk) + x.shape[1:])
-
-
-def _halo_slabs(x, plan, halo):
-    """(N, *rest) -> (n_loc, P, c + halo_width, *rest): each chunk's slab
-    carries its read window [k*c + b_min, (k+1)*c - 1 + b_max] — the
-    stencil halo exchange (rows duplicated at chunk edges).  The window
-    geometry is shared with the fused region path
-    (:func:`repro.core.comm.window_rows` /
-    :func:`repro.core.comm.halo_exchange`) so both build byte-identical
-    read windows."""
-    ch = plan.chunks
-    width = comm_mod.window_extent(ch.chunk, halo)
-    rows = comm_mod.window_rows(ch, halo, x.shape[0])
-    slab = x[rows]                                   # (K', width, *rest)
-    return slab.reshape((ch.local_chunks, ch.num_devices, width)
-                        + x.shape[1:])
-
-
-def _unpad_flat(slabs, plan, t):
-    """(n_loc, P_compute, c, *rest) -> (T, *rest)."""
-    ch = plan.chunks
-    flat = slabs.reshape((ch.padded_trip,) + slabs.shape[3:])
-    return flat[:t]
-
-
 def _execute(dp: DistributedProgram, env: dict) -> dict:
     program = dp.program
     if dp.plan is None:
         dp.plan = make_plan(
-            program, env, dp.mesh.shape[dp.axis], axis=dp.axis,
+            program, env, mesh_axis_sizes(dp.mesh, dp.axis), axis=dp.axis,
             lowering=dp.lowering, shard_inputs=dp.shard_inputs,
             paper_master_excluded=dp.paper_master_excluded,
         )
     plan = dp.plan
-    t = plan.loop.trip_count
+    t = plan.nest.total_trip
     out = dict(env)
     if t == 0:
         for key, dec in plan.vars.items():
@@ -269,6 +279,8 @@ def _execute(dp: DistributedProgram, env: dict) -> dict:
                 out[key] = rop.pairwise(env[key], zero) if key in env else zero
         return out
 
+    if plan.rank == 2:
+        return _execute_collective2(dp, env)
     if plan.lowering == "collective":
         return _execute_collective(dp, env)
     return _execute_master_worker(dp, env)
@@ -292,12 +304,12 @@ def _make_env_sub(plan, env_in, slabs_q, k0):
         dec = plan.vars[key]
         info = plan.context.vars[key]
         if dec.in_strategy == "shard":
-            env_sub[key] = _ShiftedArray(
-                slabs_q[key], k0, info.shape, info.dtype)
+            env_sub[key] = ShiftedWindow(
+                slabs_q[key], (k0,), info.shape, info.dtype)
         elif dec.in_strategy == "shard_halo":
             # slab row t holds position k0 + b_min + t
-            env_sub[key] = _ShiftedArray(
-                slabs_q[key], k0 + dec.halo[0], info.shape, info.dtype)
+            env_sub[key] = ShiftedWindow(
+                slabs_q[key], (k0 + dec.halo[0],), info.shape, info.dtype)
         elif dec.in_strategy == "replicate":
             env_sub[key] = env_in[key]
         else:  # unused inside the body: placeholder, DCE'd by XLA
@@ -397,9 +409,9 @@ def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
     for k in plan.sharded_in_keys:
         dec = plan.vars[k]
         if dec.in_strategy == "shard_halo":
-            env_slab[k] = _halo_slabs(env[k], plan, dec.halo)
+            env_slab[k] = nest_mod.halo_slabs(env[k], plan.chunks, dec.halo)
         else:
-            env_slab[k] = _pad_reshape(env[k], plan)
+            env_slab[k] = nest_mod.pad_reshape(env[k], plan.chunks)
 
     def device_fn(env_repl, env_slab):
         d = jax.lax.axis_index(axis)
@@ -457,10 +469,10 @@ def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
     result = dict(env)
     for key, dec in plan.vars.items():
         if dec.out_strategy == "identity":
-            flat = _unpad_flat(outs[key], plan, t)
+            flat = nest_mod.unpad_flat(outs[key], plan.chunks, t)
             result[key] = flat.astype(env[key].dtype)
         elif dec.out_strategy == "partial":
-            flat = _unpad_flat(outs[key], plan, t)
+            flat = nest_mod.unpad_flat(outs[key], plan.chunks, t)
             b = dec.write_map.b
             result[key] = jax.lax.dynamic_update_slice_in_dim(
                 env[key], flat.astype(env[key].dtype), b, 0)
@@ -475,6 +487,179 @@ def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
             val = outs[key]
             if rop.collective == "gather":
                 val = rop.local_fold(val, 0)
+            if key in env:
+                val = rop.pairwise(env[key], val)
+            result[key] = val
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Rank-2 collective lowering (``collapse=2`` over a 2-D mesh)
+# ---------------------------------------------------------------------------
+
+
+def _axis_lane_vectors(ch, loop, j, c_dtype=jnp.int32):
+    """One axis's lane vectors for global chunk ``j``: iteration numbers,
+    validity mask and clamped loop indices (the per-axis analogue of
+    ``_chunk_iteration_vectors``)."""
+    ks = j * ch.chunk + jnp.arange(ch.chunk, dtype=c_dtype)
+    valid = ks < loop.trip_count
+    kc = jnp.minimum(ks, max(0, loop.trip_count - 1))
+    ivec = loop.start + loop.step * kc
+    return ks, valid, kc, ivec
+
+
+def _make_env_sub2(plan, env_in, slab_stacks, q_pair, k0s):
+    """Environment seen by the body inside one (chunk_i, chunk_j) pair."""
+    qi, qj = q_pair
+    env_sub: dict[str, Any] = {}
+    for key in plan.context.env_keys:
+        dec = plan.vars[key]
+        info = plan.context.vars[key]
+        if dec.in_strategy == "shard_halo":
+            stacks = slab_stacks[key]
+            win = jax.lax.dynamic_index_in_dim(stacks, qi, 0, keepdims=False)
+            offs = [k0s[0] + dec.halo_axes[0][0]]
+            if dec.shard_ndim == 2:
+                # stack dim for axis 1 is now position 1 (n_j)
+                win = jax.lax.dynamic_index_in_dim(win, qj, 1, keepdims=False)
+                offs.append(k0s[1] + dec.halo_axes[1][0])
+            env_sub[key] = ShiftedWindow(win, tuple(offs),
+                                         info.shape, info.dtype)
+        elif dec.in_strategy == "replicate":
+            env_sub[key] = env_in[key]
+        else:  # unused inside the body: placeholder, DCE'd by XLA
+            env_sub[key] = jnp.zeros(info.shape, info.dtype)
+    return env_sub
+
+
+def _run_local_chunks2(plan, program, env_in, slab_stacks, device_indices,
+                       unroll_chunks=False):
+    """Scan this device's (chunk_i, chunk_j) pairs; returns
+    ``(carry, ys)`` with ys values laid out ``(n_i, c_i, n_j, c_j, *rest)``."""
+    ch_i, ch_j = plan.chunks_axes
+    loop_i, loop_j = plan.nest.axes
+    d_i, d_j = device_indices
+    n_i, n_j = ch_i.local_chunks, ch_j.local_chunks
+
+    carry0: dict[str, Any] = {}
+    for key, dec in plan.vars.items():
+        if dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            info = plan.context.vars[key]
+            carry0[key] = red_mod.identity_like(
+                rop, jnp.zeros(info.write.value_shape, info.write.value_dtype))
+
+    def one_pair(carry, q):
+        qi, qj = q // n_j, q % n_j
+        ji = qi * ch_i.num_devices + d_i
+        jj = qj * ch_j.num_devices + d_j
+        _, valid_i, _, ivec = _axis_lane_vectors(ch_i, loop_i, ji)
+        _, valid_j, _, jvec = _axis_lane_vectors(ch_j, loop_j, jj)
+        env_sub = _make_env_sub2(plan, env_in, slab_stacks, (qi, qj),
+                                 (ji * ch_i.chunk, jj * ch_j.chunk))
+        updates = jax.vmap(
+            lambda i: jax.vmap(lambda jv: program.body(i, jv, env_sub))(jvec)
+        )(ivec)                                    # values (c_i, c_j, *rest)
+        ys: dict[str, Any] = {}
+        for key, dec in plan.vars.items():
+            if dec.out_strategy in ("identity", "partial"):
+                ys[key] = updates[key].value
+            elif dec.out_strategy == "reduce":
+                rop = red_mod.get_reduction(dec.reduction_op)
+                upd = updates[key].value
+                ident = red_mod.identity_like(rop, upd)
+                vmask = (valid_i[:, None] & valid_j[None, :]).reshape(
+                    (ch_i.chunk, ch_j.chunk) + (1,) * (upd.ndim - 2))
+                part = rop.local_fold(jnp.where(vmask, upd, ident), (0, 1))
+                carry[key] = rop.pairwise(carry[key], part)
+        return carry, ys
+
+    if n_i * n_j == 1:
+        carry, ys = one_pair(dict(carry0), jnp.int32(0))
+        ys = {k: v[None] for k, v in ys.items()}
+    else:
+        qs = jnp.arange(n_i * n_j, dtype=jnp.int32)
+        unroll = n_i * n_j if unroll_chunks else 1
+        carry, ys = jax.lax.scan(one_pair, carry0, qs, unroll=unroll)
+    # (n_i*n_j, c_i, c_j, *rest) -> (n_i, c_i, n_j, c_j, *rest)
+    ys = {k: jnp.moveaxis(v.reshape((n_i, n_j) + v.shape[1:]), 1, 2)
+          for k, v in ys.items()}
+    return carry, ys
+
+
+def _execute_collective2(dp: DistributedProgram, env: dict) -> dict:
+    plan, program, mesh = dp.plan, dp.program, dp.mesh
+    ax_i, ax_j = plan.axes_names
+    ch_i, ch_j = plan.chunks_axes
+    trips = plan.nest.trip_counts
+
+    repl_keys = [k for k in plan.context.env_keys
+                 if plan.vars[k].in_strategy == "replicate"]
+    env_repl = {k: env[k] for k in repl_keys}
+    env_slab = {}
+    slab_specs = {}
+    for k in plan.sharded_in_keys:
+        dec = plan.vars[k]
+        if dec.shard_ndim == 2:
+            env_slab[k] = nest_mod.halo_slabs2(
+                env[k], (ch_i, ch_j), dec.halo_axes)
+            slab_specs[k] = P(None, ax_i, None, None, ax_j, None)
+        else:
+            env_slab[k] = nest_mod.halo_slabs(env[k], ch_i, dec.halo_axes[0])
+            slab_specs[k] = P(None, ax_i, None)
+
+    def device_fn(env_repl, env_slab):
+        d_i = jax.lax.axis_index(ax_i)
+        d_j = jax.lax.axis_index(ax_j)
+        slab_stacks = {}
+        for k, v in env_slab.items():
+            if plan.vars[k].shard_ndim == 2:
+                slab_stacks[k] = v[:, 0][:, :, :, 0]   # (n_i, w_i, n_j, w_j, *)
+            else:
+                slab_stacks[k] = v[:, 0]               # (n_i, w_i, *rest)
+        carry, ys = _run_local_chunks2(plan, program, env_repl, slab_stacks,
+                                       (d_i, d_j), dp.unroll_chunks)
+        outs: dict[str, Any] = {}
+        for key, dec in plan.vars.items():
+            if dec.out_strategy in ("identity", "partial"):
+                # (n_i, c_i, n_j, c_j, *) -> (n_i, 1, c_i, n_j, 1, c_j, *)
+                outs[key] = ys[key][:, None, :, :, None]
+            elif dec.out_strategy == "reduce":
+                rop = red_mod.get_reduction(dec.reduction_op)
+                outs[key] = red_mod.cross_device_combine(
+                    rop, carry[key], (ax_i, ax_j))
+        return outs
+
+    in_specs = ({k: P() for k in env_repl}, slab_specs)
+    out_specs: dict[str, Any] = {}
+    for key, dec in plan.vars.items():
+        if dec.out_strategy in ("identity", "partial"):
+            out_specs[key] = P(None, ax_i, None, None, ax_j, None)
+        elif dec.out_strategy == "reduce":
+            out_specs[key] = P()
+    if not out_specs:
+        return dict(env)
+
+    outs = shard_map(
+        device_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    )(env_repl, env_slab)
+
+    # --- reassembly at the jit level (layout, not messages) ---------------
+    result = dict(env)
+    for key, dec in plan.vars.items():
+        if dec.out_strategy == "identity":
+            flat = nest_mod.unpad_flat2(outs[key], (ch_i, ch_j), trips)
+            result[key] = flat.astype(env[key].dtype)
+        elif dec.out_strategy == "partial":
+            flat = nest_mod.unpad_flat2(outs[key], (ch_i, ch_j), trips)
+            starts = (dec.write_maps[0].b, dec.write_maps[1].b) \
+                + (0,) * (flat.ndim - 2)
+            result[key] = jax.lax.dynamic_update_slice(
+                env[key], flat.astype(env[key].dtype), starts)
+        elif dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            val = outs[key]
             if key in env:
                 val = rop.pairwise(env[key], val)
             result[key] = val
@@ -607,7 +792,7 @@ def _execute_master_worker(dp: DistributedProgram, env: dict) -> dict:
     for key in plan.context.env_keys:
         dec = plan.vars[key]
         if dec.in_strategy == "shard":
-            env_all[key] = _pad_reshape(env[key], plan)
+            env_all[key] = nest_mod.pad_reshape(env[key], plan.chunks)
         else:
             env_all[key] = env[key]
     in_specs = {k: P() for k in env_all}

@@ -21,10 +21,13 @@ from repro.core.comm import (  # noqa: F401
     BoundaryComm,
     CommCost,
     halo_exchange,
+    halo_exchange2,
     plan_boundary,
+    plan_boundary2,
     plan_comm,
 )
 from repro.core.loop import LoopInfo, LoopNotCanonical, analyze_loop  # noqa: F401
+from repro.core.nest import LoopNest, NestAffine, ShiftedWindow  # noqa: F401
 from repro.core.plan import DistPlan, KAffine, make_plan  # noqa: F401
 from repro.core.pragma import (  # noqa: F401
     DYNAMIC,
@@ -51,6 +54,7 @@ from repro.core.region import (  # noqa: F401
     DistributedRegion,
     RegionPlan,
     SlabLayout,
+    SlabLayout2,
     plan_region,
     region_to_mpi,
 )
@@ -58,6 +62,7 @@ from repro.core.schedule import (  # noqa: F401
     ChunkPlan,
     guided_chunk_size,
     make_chunk_plan,
+    make_nest_chunk_plans,
     paper_chunk_size,
 )
 from repro.core.transform import (  # noqa: F401

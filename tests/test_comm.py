@@ -5,10 +5,14 @@ boundary cost model (including 8-rank geometries) on the single real
 device; execution of the emitted halo exchanges is covered by the
 differential harness and the 8-device region test.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 from repro import omp
 from repro.core import comm
@@ -311,3 +315,209 @@ def test_window_geometry_shared_between_paths():
             expect = stat.reshape(ch.local_chunks, ch.num_devices,
                                   width)[:, d]
             np.testing.assert_array_equal(dev, expect)
+
+
+# ---------------------------------------------------------------------------
+# Rank-2 (collapse=2) boundary planning and the 2x2-mesh acceptance pin
+# ---------------------------------------------------------------------------
+
+
+def _layout2(ci=8, cj=8, pi=2, pj=2, ni=2, nj=2, bases=(0, 0), covers=None,
+             has_prior=False):
+    axes = []
+    for c, p, n, b, cv in zip((ci, cj), (pi, pj), (ni, nj), bases,
+                              covers or (ni * pi * ci, nj * pj * cj)):
+        axes.append(comm.AxisSlab(chunk=c, num_devices=p, local_chunks=n,
+                                  padded_trip=n * p * c, base=b, cover=cv))
+    return comm.SlabLayout2(tuple(axes), has_prior)
+
+
+def _chunks2(lay):
+    return tuple(
+        ChunkPlan(trip_count=a.cover, num_devices=a.num_devices,
+                  chunk=a.chunk, num_chunks=a.local_chunks * a.num_devices,
+                  local_chunks=a.local_chunks, padded_trip=a.padded_trip)
+        for a in lay.axes)
+
+
+def _plan2(lay, *, trips, shape, in_strategy="shard_halo",
+           halo_axes=((0, 1), (0, 1)), shard_ndim=2,
+           needs_replicated=False, mode="auto"):
+    return comm.plan_boundary2(
+        stage="s2", key="k", layout=lay, chunks_axes=_chunks2(lay),
+        trips=trips, aval=jax.ShapeDtypeStruct(shape, jnp.float32),
+        in_strategy=in_strategy, halo_axes=halo_axes, shard_ndim=shard_ndim,
+        needs_replicated=needs_replicated, mode=mode)
+
+
+def test_plan_boundary2_halo_wins_iff_fewer_bytes():
+    lay = _layout2(ci=8, cj=8, pi=2, pj=2, ni=2, nj=2, has_prior=True)
+    n = lay.axes[0].padded_trip + 2
+    m = lay.axes[1].padded_trip + 2
+    bc = _plan2(lay, trips=lay.covers, shape=(n, m),
+                halo_axes=((0, 2), (0, 2)))
+    assert bc.op == comm.HALO
+    halo_w = bc.alternatives[comm.HALO].wire_bytes
+    gather_w = bc.alternatives[comm.ALL_GATHER].wire_bytes
+    assert halo_w < gather_w
+    # both axes shifted one-sided: one row hop + one column hop
+    assert bc.cost.hops == 2
+    assert bc.shift == ((0, 2), (0, 2))
+    # chunk 1 per axis: the windows ARE whole neighbor chunks plus the
+    # extended corners — more bytes than the gather, which wins
+    lay2 = _layout2(ci=1, cj=1, pi=2, pj=2, ni=4, nj=4, has_prior=True)
+    bc2 = _plan2(lay2, trips=lay2.covers,
+                 shape=(lay2.axes[0].padded_trip + 1,
+                        lay2.axes[1].padded_trip + 1),
+                 halo_axes=((0, 1), (0, 1)))
+    assert bc2.op == comm.ALL_GATHER
+
+
+def test_halo_cost2_counts_rows_columns_and_corners():
+    lay = _layout2(ci=4, cj=6, pi=2, pj=2, ni=2, nj=2, has_prior=True)
+    aval = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    h = comm.halo_cost2(lay, aval, ((-1, 1), (-1, 2)))
+    k_pairs = (2 * 2) * (2 * 2)          # K_i * K_j chunk pairs
+    # row pass: (L_i+R_i) * c_j; column pass: (c_i+L_i+R_i) * (L_j+R_j)
+    per_pair = (1 + 1) * 6 + (4 + 1 + 1) * (1 + 2)
+    assert h.wire_bytes == k_pairs * per_pair * 4
+    assert h.hops == 4
+    g = comm.gather_cost2(lay, aval)
+    assert g.wire_bytes == (lay.axes[0].padded_trip
+                            * lay.axes[1].padded_trip * 4 * (2 * 2 - 1))
+
+
+def test_plan_boundary2_resident_and_forced_replicate():
+    lay = _layout2(ci=8, cj=8, pi=2, pj=2, ni=2, nj=2)
+    trips = lay.covers
+    shape = (lay.axes[0].padded_trip, lay.axes[1].padded_trip)
+    bc = _plan2(lay, trips=trips, shape=shape, halo_axes=((0, 0), (0, 0)))
+    assert bc.op == comm.RESIDENT
+    assert bc.cost.wire_bytes == 0
+    # whole-array consumer: gather forced, halo never offered
+    bc2 = _plan2(lay, trips=trips, shape=shape, in_strategy="replicate",
+                 halo_axes=None, shard_ndim=0)
+    assert bc2.op == comm.REPLICATE
+    assert comm.HALO not in bc2.alternatives
+    # out-merge prior forces replication even for a stencil consumer
+    bc3 = _plan2(lay, trips=trips, shape=shape, needs_replicated=True)
+    assert bc3.op == comm.REPLICATE
+    # a consumer sharding only the leading axis re-gathers a 2-D slab
+    bc4 = _plan2(lay, trips=trips, shape=shape, halo_axes=((0, 1),),
+                 shard_ndim=1)
+    assert bc4.op == comm.ALL_GATHER
+    assert "leading axis" in bc4.reason
+
+
+def test_plan_boundary2_infeasibility_and_gather_mode():
+    # halo wider than one chunk on axis j -> gather
+    lay = _layout2(ci=8, cj=2, pi=2, pj=2, ni=2, nj=2, has_prior=True)
+    bc = _plan2(lay, trips=lay.covers,
+                shape=(lay.axes[0].padded_trip + 4,
+                       lay.axes[1].padded_trip + 4),
+                halo_axes=((0, 1), (0, 3)))
+    assert bc.op == comm.ALL_GATHER
+    assert "axis-1" in bc.reason and "chunk" in bc.reason
+    # reads below a shifted slab with no prior -> gather; with -> halo
+    lay_np = _layout2(ci=8, cj=8, pi=2, pj=2, bases=(1, 1),
+                      covers=(20, 20), has_prior=False)
+    bc2 = _plan2(lay_np, trips=(20, 20), shape=(24, 24),
+                 halo_axes=((0, 2), (0, 2)))
+    assert bc2.op == comm.ALL_GATHER and "prior" in bc2.reason
+    lay_p = _layout2(ci=8, cj=8, pi=2, pj=2, bases=(1, 1),
+                     covers=(20, 20), has_prior=True)
+    bc3 = _plan2(lay_p, trips=(20, 20), shape=(24, 24),
+                 halo_axes=((0, 2), (0, 2)))
+    assert bc3.op == comm.HALO
+    assert bc3.shift == ((-1, 1), (-1, 1))
+    # mode="gather" pins the baseline
+    bc4 = _plan2(lay_p, trips=(20, 20), shape=(24, 24),
+                 halo_axes=((0, 2), (0, 2)), mode="gather")
+    assert bc4.op == comm.ALL_GATHER
+
+
+def _heat2d_region(n=128, m=96, c=8):
+    from repro import omp as _omp
+
+    def sweep(src, dst, name):
+        @_omp.parallel_for(start=(1, 1), stop=(n - 1, m - 1), collapse=2,
+                           schedule=_omp.static(c), name=name)
+        def body(i, j, env):
+            v = 0.25 * (env[src][i - 1, j] + env[src][i + 1, j]
+                        + env[src][i, j - 1] + env[src][i, j + 1])
+            return {dst: _omp.at((i, j), v)}
+        return body
+
+    reg = omp.region(sweep("a", "b", "s1"), sweep("b", "a", "s2"),
+                     sweep("a", "b", "s3"), name="heat2d")
+    env = {"a": jnp.sin(jnp.arange(n * m, dtype=jnp.float32)).reshape(n, m),
+           "b": jnp.zeros((n, m), jnp.float32)}
+    return reg, env
+
+
+def test_heat2d_plan_halo_beats_gather_5x_on_2x2():
+    """ISSUE 3 acceptance pin: the collapse=2 heat chain's 2-D halo plan
+    moves >=5x fewer modeled wire bytes than the all-gather rule on a
+    2x2 mesh (pure planning, no devices needed)."""
+    reg, env = _heat2d_region()
+    comms = omp.plan_comm(reg, env, (2, 2))
+    halo_bcs = [bc for bc in comms if bc.op == comm.HALO]
+    assert len(halo_bcs) == 2, [bc.op for bc in comms]
+    for bc in halo_bcs:
+        assert 5 * bc.cost.wire_bytes <= \
+            bc.alternatives[comm.ALL_GATHER].wire_bytes
+    rp = plan_region(reg, env, (2, 2), axis=("i", "j"))
+    assert rp.n_halo == 2 and rp.n_reshards == 0
+    assert 5 * rp.planned_wire_bytes <= rp.gather_wire_bytes
+    # the PR 1 baseline mode falls back to gathers
+    comms_g = omp.plan_comm(reg, env, (2, 2), comm="gather")
+    assert all(bc.op == comm.ALL_GATHER for bc in comms_g)
+
+
+def test_heat2d_executes_on_2x2_mesh(multidevice):
+    """ISSUE 3 acceptance pin: a collapse=2 heat-equation program lowers
+    through BOTH to_mpi and region_to_mpi(comm="auto") on a real 2x2
+    mesh and matches the shared-memory reference; the fused lowering
+    emits collective-permutes for the 2-D halo boundaries."""
+    out = multidevice(f"""
+        import sys
+        sys.path.insert(0, {REPO!r})
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import omp
+        from repro.compat import make_mesh
+        from repro.launch import hlo_analysis as ha
+        from tests.test_comm import _heat2d_region
+
+        mesh = make_mesh((2, 2), ("i", "j"))
+        reg, env = _heat2d_region(n=48, m=32, c=8)
+        ref = reg(env)
+
+        dist = omp.region_to_mpi(reg, mesh, env_like=env, comm="auto")
+        got = dist(env)
+        for k in ref:
+            assert np.allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                               atol=1e-4), k
+        assert dist.plan.n_halo == 2 and dist.plan.n_reshards == 0, \\
+            dist.plan.log
+        assert 5 * dist.plan.planned_wire_bytes <= \\
+            dist.plan.gather_wire_bytes
+        text = dist.report()
+        assert "HALO-EXCHANGED 2-D" in text
+
+        avals = {{k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in env.items()}}
+        co = jax.jit(lambda e: dist(e)).lower(avals).compile()
+        kinds = ha.analyze_hlo(co.as_text(), num_devices=4).by_kind()
+        assert kinds.get("collective-permute", 0) > 0, kinds
+
+        # the single-block path: each sweep through to_mpi
+        sweep1 = reg.loops[0]
+        d1 = omp.to_mpi(sweep1, mesh, shard_inputs=True)
+        got1 = d1(env)
+        ref1 = omp.run_reference(sweep1, env)
+        for k in ref1:
+            assert np.allclose(np.asarray(got1[k]), np.asarray(ref1[k]),
+                               atol=1e-4), k
+        print("OKHEAT2D")
+    """, n_devices=4)
+    assert "OKHEAT2D" in out

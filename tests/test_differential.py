@@ -271,6 +271,173 @@ def run_sweep(seeds, device_counts) -> None:
     print("families:", ",".join(sorted(covered)))
 
 
+# ---------------------------------------------------------------------------
+# Rank-2 (collapse=2) program families over 2-D meshes
+# ---------------------------------------------------------------------------
+
+FAMILIES2 = ("heat2d", "transpose2", "rowreduce2", "matmul2")
+
+
+def make_case2(seed: int, family: str | None = None):
+    """Build one random canonical ``collapse=2`` program (or region) +
+    env from a seed: the 2-D families of the paper's benchmark suite
+    (Jacobi/heat stencils, transposed feeds, reductions, matmul tiles).
+    """
+    import jax.numpy as jnp
+
+    from repro import omp
+
+    rng = random.Random(seed)
+    if family is None:
+        family = rng.choice(FAMILIES2)
+    assert family in FAMILIES2, family
+    sched = _schedule(rng)
+    fx = jnp.float32
+
+    if family == "heat2d":
+        n = rng.randint(6, 14)
+        m = rng.randint(6, 14)
+
+        def sweep(src, dst, name):
+            @omp.parallel_for(start=(1, 1), stop=(n - 1, m - 1), collapse=2,
+                              schedule=sched, name=name)
+            def body(i, j, env):
+                v = 0.25 * (env[src][i - 1, j] + env[src][i + 1, j]
+                            + env[src][i, j - 1] + env[src][i, j + 1])
+                return {dst: omp.at((i, j), v)}
+            return body
+
+        prog = omp.region(sweep("a", "b", f"h1_{seed}"),
+                          sweep("b", "a", f"h2_{seed}"),
+                          name=f"heat2d{seed}")
+        env = {"a": jnp.sin(jnp.arange(n * m, dtype=fx)).reshape(n, m),
+               "b": jnp.zeros((n, m), fx)}
+
+    elif family == "transpose2":
+        n = rng.randint(4, 10)
+
+        @omp.parallel_for(stop=(n, n), collapse=2, schedule=sched,
+                          name=f"t1_{seed}")
+        def t1(i, j, env):
+            return {"t": omp.at((i, j), env["x"][i, j] * 2.0)}
+
+        @omp.parallel_for(stop=(n, n), collapse=2, schedule=sched,
+                          name=f"t2_{seed}")
+        def t2(i, j, env):
+            return {"y": omp.at((i, j), env["t"][j, i] + 1.0)}
+
+        prog = omp.region(t1, t2, name=f"transpose2_{seed}")
+        env = {"x": jnp.arange(n * n, dtype=fx).reshape(n, n) * 0.1,
+               "t": jnp.zeros((n, n), fx), "y": jnp.zeros((n, n), fx)}
+
+    elif family == "rowreduce2":
+        n = rng.randint(3, 10)
+        m = rng.randint(3, 10)
+        op = rng.choice(["+", "max", "min", "*"])
+        fresh = rng.random() < 0.4
+
+        @omp.parallel_for(stop=(n, m), collapse=2, schedule=sched,
+                          reduction={"s": op}, name=f"rr_{seed}")
+        def prog(i, j, env):
+            return {"s": omp.red(env["x"][i, j])}
+
+        env = {"x": 1.0 + 0.1 * jnp.sin(
+            jnp.arange(n * m, dtype=fx)).reshape(n, m)}
+        if not fresh:
+            env["s"] = fx(0.5)
+
+    else:  # matmul2
+        n = rng.randint(3, 9)
+        m = rng.randint(3, 9)
+        kk = rng.randint(2, 6)
+
+        @omp.parallel_for(stop=(n, m), collapse=2, schedule=sched,
+                          name=f"mm_{seed}")
+        def prog(i, j, env):
+            return {"C": omp.at((i, j),
+                                jnp.dot(env["A"][i], env["B"][:, j]))}
+
+        env = {"A": jnp.arange(n * kk, dtype=fx).reshape(n, kk) * 0.05,
+               "B": jnp.arange(kk * m, dtype=fx).reshape(kk, m) * 0.03,
+               "C": -jnp.ones((n, m), fx)}
+
+    return prog, env, family
+
+
+def check_case2(seed: int, mesh, family: str | None = None) -> str:
+    """Every rank-2 lowering of the drawn program must match the
+    shared-memory reference on the given 2-D mesh."""
+    from repro import omp
+
+    prog, env, family = make_case2(seed, family)
+    is_region = isinstance(prog, omp.ParallelRegion)
+    ref = prog(env)
+    shape = (mesh.shape["i"], mesh.shape["j"])
+
+    variants = {}
+    if is_region:
+        variants["region2_auto"] = omp.region_to_mpi(prog, mesh, comm="auto")
+        variants["region2_gather"] = omp.region_to_mpi(prog, mesh,
+                                                       comm="gather")
+    else:
+        variants["mpi2"] = omp.to_mpi(prog, mesh)
+        variants["mpi2_sharded"] = omp.to_mpi(prog, mesh, shard_inputs=True)
+        variants["region2_auto"] = omp.region_to_mpi(prog, mesh)
+
+    for vname, dist in variants.items():
+        got = dist(env)
+        assert set(got) == set(ref), (
+            f"seed={seed} {family}/{vname} mesh={shape}: key set "
+            f"{sorted(got)} != {sorted(ref)}")
+        for k in ref:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(ref[k]),
+                rtol=1e-4, atol=1e-4,
+                err_msg=f"seed={seed} {family}/{vname} mesh={shape} key={k!r}")
+    return family
+
+
+def run_sweep2(mesh_shapes) -> None:
+    """Subprocess entry point: every 2-D family on every mesh shape."""
+    from repro.compat import make_mesh
+
+    covered = set()
+    for si, shape in enumerate(mesh_shapes):
+        mesh = make_mesh(shape, ("i", "j"))
+        for fj, fam in enumerate(FAMILIES2):
+            covered.add(check_case2(7000 + 100 * si + fj, mesh, family=fam))
+    assert covered == set(FAMILIES2), sorted(set(FAMILIES2) - covered)
+    print("families2:", ",".join(sorted(covered)))
+
+
+@settings(max_examples=4)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_differential_2d_single_device(seed):
+    """1x1 meshes in-process: the rank-2 transformation must be a
+    semantic no-op for every drawn collapse=2 program."""
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("i", "j"))
+    check_case2(seed, mesh)
+
+
+def test_differential_2d_multidevice(multidevice):
+    """2x1 / 2x2 / 4x2 meshes (8 virtual devices, one subprocess): every
+    rank-2 lowering of every family matches the reference."""
+    out = multidevice(f"""
+        import sys
+        sys.path.insert(0, {REPO!r})
+        from tests.test_differential import run_sweep2
+        run_sweep2(((2, 1), (2, 2), (4, 2)))
+        print("OKDIFF2")
+    """, n_devices=8)
+    assert "OKDIFF2" in out
+    families_line = [l for l in out.splitlines()
+                     if l.startswith("families2:")][0]
+    for fam in FAMILIES2:
+        assert fam in families_line, fam
+
+
 @settings(max_examples=10)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_differential_single_device(seed):

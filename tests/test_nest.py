@@ -1,0 +1,143 @@
+"""The loop-nest IR (core/nest.py): the single owner of window
+geometry, slab slicing and env substitution.
+
+These tests pin the tentpole invariant of ISSUE 3: the three formerly
+divergent copies (``transform._halo_slabs`` / ``region._local_slabs`` /
+``comm`` window geometry) are gone and every layer addresses the one
+implementation in :mod:`repro.core.nest`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, nest, region, transform
+from repro.core.loop import LoopNotCanonical, analyze_loop
+from repro.core.nest import LoopNest, NestAffine, ShiftedWindow
+from repro.core.schedule import ChunkPlan
+
+
+def _ch(t=60, p=4, c=4):
+    k = -(-max(1, t) // c)
+    k_pad = -(-k // p) * p
+    return ChunkPlan(trip_count=t, num_devices=p, chunk=c, num_chunks=k_pad,
+                     local_chunks=k_pad // p, padded_trip=k_pad * c)
+
+
+# ---------------------------------------------------------------------------
+# Single ownership: every layer uses nest.py's geometry
+# ---------------------------------------------------------------------------
+
+
+def test_geometry_has_one_owner():
+    """comm re-exports nest's geometry functions (same objects), and the
+    old private copies in transform/region are gone."""
+    assert comm.window_rows is nest.window_rows
+    assert comm.window_extent is nest.window_extent
+    assert comm.device_window_rows is nest.device_window_rows
+    for mod, names in ((transform, ("_halo_slabs", "_pad_reshape",
+                                    "_unpad_flat", "_ShiftedArray")),
+                       (region, ("_local_slabs",)),
+                       (comm, ())):
+        for name in names:
+            assert not hasattr(mod, name), f"{mod.__name__}.{name} came back"
+
+
+def test_staging_and_local_windows_agree_rank1():
+    """halo_slabs (jit-level staging) and local_slabs (in-shard_map
+    slicing of a replicated copy) must produce identical windows."""
+    ch = _ch(t=60, p=4, c=4)
+    x = jnp.arange(60, dtype=jnp.float32) * 1.5
+    for halo in ((0, 0), (0, 2), (1, 1), (2, 3)):
+        staged = nest.halo_slabs(x, ch, halo)       # (n_loc, P, w, ...)
+        for d in range(ch.num_devices):
+            local = nest.local_slabs(x, ch, halo, d)
+            np.testing.assert_array_equal(np.asarray(staged[:, d]),
+                                          np.asarray(local))
+
+
+def test_staging_and_local_windows_agree_rank2():
+    ch_i, ch_j = _ch(t=24, p=2, c=4), _ch(t=18, p=2, c=3)
+    x = jnp.arange(24 * 18, dtype=jnp.float32).reshape(24, 18)
+    halos = ((0, 2), (1, 1))
+    staged = nest.halo_slabs2(x, (ch_i, ch_j), halos)
+    for di in range(2):
+        for dj in range(2):
+            local = nest.local_slabs2(x, (ch_i, ch_j), halos, (di, dj))
+            np.testing.assert_array_equal(
+                np.asarray(staged[:, di, :, :, dj]), np.asarray(local))
+
+
+def test_pad_reshape_roundtrip():
+    ch = _ch(t=10, p=4, c=2)
+    x = jnp.arange(10, dtype=jnp.float32)
+    slab = nest.pad_reshape(x, ch)
+    assert slab.shape == (ch.local_chunks, ch.num_devices, ch.chunk)
+    np.testing.assert_array_equal(np.asarray(nest.unpad_flat(slab, ch, 10)),
+                                  np.asarray(x))
+
+
+def test_unpad_flat2_roundtrip():
+    ch_i, ch_j = _ch(t=5, p=2, c=2), _ch(t=3, p=2, c=1)
+    x = jnp.arange(5 * 3, dtype=jnp.float32).reshape(5, 3)
+    slab = nest.halo_slabs2(x, (ch_i, ch_j), ((0, 0), (0, 0)))
+    flat = nest.unpad_flat2(slab, (ch_i, ch_j), (5, 3))
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# The nest IR itself
+# ---------------------------------------------------------------------------
+
+
+def test_loop_nest_ranks_and_trips():
+    n1 = LoopNest((analyze_loop(0, 10, 2),))
+    assert n1.rank == 1 and n1.trip_counts == (5,) and n1.total_trip == 5
+    n2 = LoopNest((analyze_loop(1, 7, 1), analyze_loop(0, 4, 1)))
+    assert n2.rank == 2 and n2.trip_counts == (6, 4)
+    assert n2.total_trip == 24
+    with pytest.raises(LoopNotCanonical):
+        LoopNest((analyze_loop(0, 2, 1),) * 3)
+
+
+def test_nest_affine_algebra_and_k_space():
+    a = NestAffine((1, 0), 0)
+    b = NestAffine((0, 1), 2)
+    s = a + b.scale(3)
+    assert s == NestAffine((1, 3), 6)
+    assert (a - a).is_const
+    # i in range(2, 20, 3): i-1 reads position 3*ki + 1 in k-space
+    n2 = LoopNest((analyze_loop(2, 20, 3), analyze_loop(0, 4, 1)))
+    k = (a + NestAffine((0, 0), -1)).k_space(n2)
+    assert k == NestAffine((3, 0), 1)
+    assert NestAffine((0, 1), 5).k_space(n2) == NestAffine((0, 1), 5)
+    assert NestAffine((1, 0), 0).k_space(
+        LoopNest((analyze_loop(0, 8, 1), analyze_loop(0, 8, 1)))
+    ).unit_axis() == 0
+    assert NestAffine((1, 1), 0).unit_axis() is None
+
+
+def test_shifted_window_serves_offsets():
+    win = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    sw = ShiftedWindow(win, (10,), (100, 3), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(sw[11]), np.asarray(win[1]))
+    assert float(sw[12, 2]) == float(win[2, 2])
+    sw2 = ShiftedWindow(win, (10, 20), (100, 100), jnp.float32)
+    assert float(sw2[11, 21]) == float(win[1, 1])
+    with pytest.raises(nest.SubstitutionFailed):
+        sw2[5]          # needs both leading indices
+    with pytest.raises(nest.SubstitutionFailed):
+        sw + 1          # non-getitem use
+
+
+def test_window_rows_matches_device_rows():
+    ch = _ch(t=60, p=4, c=4)
+    for halo in ((0, 0), (0, 2), (1, 1), (2, 3)):
+        stat = nest.window_rows(ch, halo, 60)
+        width = nest.window_extent(ch.chunk, halo)
+        assert stat.shape == (ch.num_chunks, width)
+        for d in range(ch.num_devices):
+            dev = np.asarray(nest.device_window_rows(ch, halo, d, 60))
+            expect = stat.reshape(ch.local_chunks, ch.num_devices,
+                                  width)[:, d]
+            np.testing.assert_array_equal(dev, expect)

@@ -169,3 +169,117 @@ def test_small_trip_execution_all_strategies():
         for k in ref:
             np.testing.assert_allclose(np.asarray(out[k]),
                                        np.asarray(ref[k]), err_msg=str(kw))
+
+
+# ---------------------------------------------------------------------------
+# Rank-2 nests: per-axis chunk plans and their degenerate edges
+# ---------------------------------------------------------------------------
+
+
+def _nest(bounds):
+    from repro.core.nest import LoopNest
+
+    return LoopNest(tuple(analyze_loop(s, e, t) for s, e, t in bounds))
+
+
+@pytest.mark.parametrize("trips,devs", [
+    ((0, 0), (2, 2)),     # both axes degenerate
+    ((0, 8), (2, 2)),     # axis i degenerate
+    ((8, 0), (4, 2)),     # axis j degenerate
+    ((0, 0), (1, 1)),
+])
+@pytest.mark.parametrize("sched", [omp.dynamic(), omp.static(), omp.static(3)])
+def test_nest_chunk_plans_zero_trip_axes(trips, devs, sched):
+    """Per-axis plans stay well-formed when either (or both) axes have a
+    zero-trip iteration space: positive chunks, padded layout divisible
+    by that axis's device count — the invariants the 2-D slab reshape
+    (n, P, c per axis) relies on."""
+    from repro.core.schedule import make_nest_chunk_plans
+
+    nest = _nest(((0, trips[0], 1), (0, trips[1], 1)))
+    plans = make_nest_chunk_plans(nest, (sched, sched), devs)
+    assert len(plans) == 2
+    for plan, t, p in zip(plans, trips, devs):
+        assert plan.trip_count == t
+        assert plan.chunk >= 1
+        assert plan.num_chunks % p == 0 and plan.num_chunks >= p
+        assert plan.local_chunks * p == plan.num_chunks
+        assert plan.padded_trip == plan.num_chunks * plan.chunk
+        assert plan.padded_trip >= t
+
+
+@pytest.mark.parametrize("trips,devs", [
+    ((1, 1), (4, 2)),     # both axes below their rank counts
+    ((3, 16), (8, 2)),    # axis i below, axis j above
+    ((16, 1), (2, 4)),    # axis j below
+])
+def test_nest_chunk_plans_small_trip_axes(trips, devs):
+    """trip < ranks per axis: every iteration is owned exactly once
+    under the per-axis cyclic assignment and idle ranks get only
+    padding chunks (mirroring the 1-D pins above)."""
+    from repro.core.schedule import make_nest_chunk_plans
+
+    nest = _nest(((0, trips[0], 1), (0, trips[1], 1)))
+    plans = make_nest_chunk_plans(
+        nest, (omp.dynamic(), omp.dynamic()), devs)
+    for plan, t, p in zip(plans, trips, devs):
+        assert 1 <= plan.chunk <= max(1, t)
+        owners = [plan.owner_of_iteration(k) for k in range(t)]
+        assert all(0 <= o < p for o in owners)
+        assert len(set(owners)) == min(p, -(-t // plan.chunk))
+
+
+def test_nest_chunk_plans_rank_mismatch_rejected():
+    from repro.core.schedule import make_nest_chunk_plans
+
+    nest = _nest(((0, 4, 1), (0, 4, 1)))
+    with pytest.raises(ValueError):
+        make_nest_chunk_plans(nest, (omp.dynamic(),), (2, 2))
+
+
+def _mesh2():
+    from repro.compat import make_mesh
+
+    return make_mesh((1, 1), ("i", "j"))
+
+
+def test_zero_trip_2d_execution_matches_reference():
+    """A collapse=2 nest with one zero-trip axis writes nothing; a
+    declared reduction still defines its variable as the op identity in
+    BOTH executors (both-axes-degenerate and one-axis-degenerate)."""
+    for stop in ((0, 0), (0, 5), (5, 0)):
+        @omp.parallel_for(stop=stop, collapse=2,
+                          reduction={"s": "+"}, name="z2")
+        def z2(i, j, env):
+            return {"y": omp.at((i, j), env["x"][i, j]),
+                    "s": omp.red(env["x"][i, j])}
+
+        env = {"x": jnp.arange(20, dtype=jnp.float32).reshape(4, 5),
+               "y": -jnp.ones((4, 5), jnp.float32)}
+        ref = omp.run_reference(z2, env)
+        out = omp.to_mpi(z2, _mesh2())(env)
+        assert sorted(ref) == sorted(out) == ["s", "x", "y"]
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(ref[k]), err_msg=str(stop))
+        assert float(out["s"]) == 0.0
+        assert float(out["y"][0, 0]) == -1.0
+
+
+def test_small_trip_2d_execution():
+    """(2, 1) trips on a 1x1 2-D mesh: identity writes and reductions
+    survive per-axis padding chunks."""
+    @omp.parallel_for(stop=(2, 1), collapse=2, schedule=omp.dynamic(),
+                      reduction={"s": "+"}, name="small2")
+    def small2(i, j, env):
+        v = env["x"][i, j] * 2.0
+        return {"y": omp.at((i, j), v), "s": omp.red(v)}
+
+    env = {"x": jnp.arange(2, dtype=jnp.float32).reshape(2, 1),
+           "y": jnp.zeros((2, 1), jnp.float32), "s": jnp.float32(1.0)}
+    ref = omp.run_reference(small2, env)
+    for kw in (dict(), dict(shard_inputs=True)):
+        out = omp.to_mpi(small2, _mesh2(), **kw)(env)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(ref[k]), err_msg=str(kw))

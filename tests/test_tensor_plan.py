@@ -63,3 +63,15 @@ def test_serve_plan_2d_expert_sharding():
     assert spec[1] in ("data", ("data",))
     used = [s for s in spec if s is not None]
     assert len(used) >= 2
+
+
+def test_slab_spec_rank1_and_rank2():
+    """Loop slabs are ordinary sharded tensors: one device dim for a
+    rank-1 slab, two (every third dim) for a rank-2 nest over a 2-D
+    mesh — the bridge between loop residency and model sharding."""
+    assert tp.slab_spec("data") == P(None, "data")
+    assert tp.slab_spec(("i", "j")) == P(None, "i", None, None, "j", None)
+    import pytest
+
+    with pytest.raises(ValueError):
+        tp.slab_spec(("i", "j", "k"))

@@ -25,9 +25,11 @@ REQUIRED = [
 # Sections/markers each doc must keep (guards against silently dropping
 # the subsystem docs when files are rewritten).
 REQUIRED_SECTIONS = {
-    "README.md": ["## Communication planning"],
-    "EXPERIMENTS.md": ["## Perf-D"],
-    "docs/PAPER_MAP.md": ["core/comm.py"],
+    "README.md": ["## Communication planning",
+                  "## Nested loops & 2-D meshes"],
+    "EXPERIMENTS.md": ["## Perf-D", "## Perf-E"],
+    "docs/PAPER_MAP.md": ["core/comm.py", "`collapse(2)`", "LoopNest",
+                          "core/nest.py"],
 }
 
 # repo-relative path tokens inside backticks, e.g. `src/repro/core/plan.py`
