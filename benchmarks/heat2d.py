@@ -9,7 +9,7 @@ over BOTH grid axes on a 4x2 mesh.
 
 Variants:
 
-* ``fused_halo``   — ``omp.region_to_mpi(..., comm="auto")``: each 2-D
+* ``fused_halo``   — ``omp.compile(..., comm="auto")``: each 2-D
   boundary lowers to row-ring + column-ring ``ppermute`` shifts moving
   O(halo · perimeter) cells (corners ride the second pass),
 * ``fused_gather`` — ``comm="gather"``: the PR 1 rule (one
@@ -94,10 +94,9 @@ def measure():
              for k, v in env.items()}
 
     variants = [
-        ("fused_halo", omp.region_to_mpi(reg, mesh, env_like=env,
-                                         comm="auto")),
-        ("fused_gather", omp.region_to_mpi(reg, mesh, env_like=env,
-                                           comm="gather")),
+        ("fused_halo", omp.compile(reg, mesh, env_like=env, comm="auto")),
+        ("fused_gather", omp.compile(reg, mesh, env_like=env,
+                                     comm="gather")),
     ]
     rows = []
     modeled = {}

@@ -106,12 +106,12 @@ def run_polybench_lowering_compare(out_dir: str = "results/perf"):
             ("master_worker", dict(lowering="master_worker")),
             ("collective", dict(lowering="collective")),
             ("collective_shardin", dict(lowering="collective",
-                                        shard_inputs=True)),
+                                        shard="slice")),
         ]:
             def pipeline(env, kw=kw, k=k):
                 out = dict(env)
                 for prog in k.programs:
-                    out = omp.to_mpi(prog, mesh, **kw)(out)
+                    out = omp.compile(prog, mesh, **kw)(out)
                 return out
 
             avals = {kk: jax.ShapeDtypeStruct(v.shape, v.dtype)

@@ -4,10 +4,10 @@ The acceptance experiment for the ParallelRegion subsystem
 (EXPERIMENTS.md §Perf-C): on ≥2-loop chains, count the collective ops
 and per-chip wire bytes in the optimized SPMD HLO for
 
-* ``region_fused``   — ``omp.region_to_mpi`` (one shard_map, residency
+* ``region_fused``   — ``omp.compile`` fused lowering (one shard_map, residency
   planner elides inter-loop gather→rebroadcast round trips),
 * ``staged_coll``    — the same loops transformed one at a time with the
-  collective lowering (``fuse=False``),
+  collective lowering (``lowering="collective"``),
 * ``staged_mw``      — per-loop master/worker staging, the paper's
   pattern (all traffic through rank 0's links).
 
@@ -134,10 +134,9 @@ def bench_chain(make):
              for k, v in env.items()}
 
     variants = [
-        ("region_fused", omp.region_to_mpi(reg, mesh, env_like=env)),
-        ("staged_coll", omp.region_to_mpi(reg, mesh, fuse=False)),
-        ("staged_mw", omp.region_to_mpi(reg, mesh,
-                                        lowering="master_worker")),
+        ("region_fused", omp.compile(reg, mesh, env_like=env)),
+        ("staged_coll", omp.compile(reg, mesh, lowering="collective")),
+        ("staged_mw", omp.compile(reg, mesh, lowering="master_worker")),
     ]
     rows = []
     for vname, prog in variants:

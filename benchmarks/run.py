@@ -12,13 +12,23 @@ Sections:
   the Fig. 6 analogue; real distributed numbers come from the dry-run).
 * region_* / stencil_halo_* / heat2d_*: fused-region and halo-vs-gather
   comparisons (8 virtual devices in subprocesses; HLO-measured bytes).
+* compile_cache_*: cold vs warm ``omp.compile`` (the structural
+  compilation cache); the ``--json`` payload carries the totals in its
+  ``compile_cache`` section.
 * kernels_*: Pallas interpret-mode kernels vs jnp oracles.
 * train_step_* / decode_step_*: smoke-size LM steps (end-to-end
   substrate sanity + µs tracking).
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+# Make ``benchmarks.*`` importable under the documented invocation
+# ``PYTHONPATH=src python benchmarks/run.py`` (script mode puts only
+# benchmarks/ itself on sys.path).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 import jax.numpy as jnp
@@ -127,7 +137,7 @@ def bench_polybench():
                 out = prog(out)
             return out
 
-        dists = [omp.to_mpi(p, mesh) for p in k.programs]
+        dists = [omp.compile(p, mesh) for p in k.programs]
 
         def run_mpi(env=env, dists=dists):
             out = dict(env)
@@ -214,6 +224,57 @@ def bench_heat2d():
 
 
 # ---------------------------------------------------------------------------
+# Compilation cache (omp.compile cold vs warm)
+# ---------------------------------------------------------------------------
+
+# Filled by bench_compile_cache; serialised as the ``compile_cache``
+# section of the --json payload.
+COMPILE_CACHE: dict = {}
+
+
+def bench_compile_cache():
+    """Cold vs warm ``omp.compile``: the structural compilation cache
+    must make repeated compiles (benchmark sweeps, the differential
+    harness) skip re-planning entirely."""
+    from benchmarks.polybench import ALL_KERNELS
+    from repro import omp
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((len(jax.devices()),), ("data",))
+    cold_us = warm_us = 0.0
+    n_programs = 0
+    omp.clear_compile_cache()
+    for make in ALL_KERNELS:
+        k = make()
+        env = k.env_fn(k.n)
+        for prog in k.programs:
+            n_programs += 1
+            t0 = time.perf_counter()
+            omp.compile(prog, mesh, env_like=env)
+            cold_us += (time.perf_counter() - t0) * 1e6
+            t0 = time.perf_counter()
+            c = omp.compile(prog, mesh, env_like=env)
+            warm_us += (time.perf_counter() - t0) * 1e6
+            assert c.cache_hit, f"warm compile of {prog.name} missed the cache"
+            env = prog(env)  # next block sees this block's outputs
+    stats = omp.compile_cache_stats()
+    speedup = cold_us / max(warm_us, 1e-9)
+    COMPILE_CACHE.update({
+        "n_programs": n_programs,
+        "cold_us_total": round(cold_us, 1),
+        "warm_us_total": round(warm_us, 1),
+        "speedup": round(speedup, 1),
+        "hits": stats["hits"],
+        "misses": stats["misses"],
+    })
+    _row("compile_cache_cold", cold_us / n_programs,
+         f"programs={n_programs}")
+    _row("compile_cache_warm", warm_us / n_programs,
+         f"speedup={speedup:.1f};hits={stats['hits']};"
+         f"misses={stats['misses']}")
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernels
 # ---------------------------------------------------------------------------
 
@@ -288,7 +349,8 @@ def main(argv=None) -> None:
     parser.add_argument(
         "--sections", default=None,
         help="comma-separated subset of sections to run "
-             "(polybench,region,stencil_halo,heat2d,kernels,lm)")
+             "(polybench,region,stencil_halo,heat2d,compile_cache,"
+             "kernels,lm)")
     args = parser.parse_args(argv)
 
     sections = {
@@ -296,6 +358,7 @@ def main(argv=None) -> None:
         "region": bench_region,
         "stencil_halo": bench_stencil_halo,
         "heat2d": bench_heat2d,
+        "compile_cache": bench_compile_cache,
         "kernels": bench_kernels,
         "lm": bench_lm_steps,
     }
@@ -319,6 +382,8 @@ def main(argv=None) -> None:
             "sections": wanted,
             "results": RESULTS,
         }
+        if COMPILE_CACHE:   # only when the compile_cache section ran
+            payload["compile_cache"] = COMPILE_CACHE
         with open(args.json, "w", encoding="utf-8") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {len(RESULTS)} results to {args.json}", flush=True)

@@ -6,7 +6,7 @@ paper's Jacobi/heat shape, §4 — each sweep consumes the previous
 sweep's array through a 3-point window and overwrites the one before
 it), compare the optimized-HLO collective traffic of
 
-* ``fused_halo``    — ``omp.region_to_mpi(..., comm="auto")``: the
+* ``fused_halo``    — ``omp.compile(..., comm="auto")``: the
   planner lowers each stencil boundary to neighbor ``ppermute`` ring
   shifts moving O(halo · chunks) rows,
 * ``fused_gather``  — ``comm="gather"``: the PR 1 rule (one
@@ -103,12 +103,10 @@ def measure():
              for k, v in env.items()}
 
     variants = [
-        ("fused_halo", omp.region_to_mpi(reg, mesh, env_like=env,
-                                         comm="auto")),
-        ("fused_gather", omp.region_to_mpi(reg, mesh, env_like=env,
-                                           comm="gather")),
-        ("staged_mw", omp.region_to_mpi(reg, mesh,
-                                        lowering="master_worker")),
+        ("fused_halo", omp.compile(reg, mesh, env_like=env, comm="auto")),
+        ("fused_gather", omp.compile(reg, mesh, env_like=env,
+                                     comm="gather")),
+        ("staged_mw", omp.compile(reg, mesh, lowering="master_worker")),
     ]
     rows, kinds = [], {}
     for vname, prog in variants:
@@ -125,7 +123,7 @@ def measure():
         n_ops = sum(c.multiplier for c in rep.collectives)
         us = _timeit(jitted, env)
         extra = ""
-        if prog.plan is not None:
+        if vname.startswith("fused"):
             ops = ",".join(bc.op for bc in prog.plan.comms)
             extra = (f";halo={prog.plan.n_halo}"
                      f";reshards={prog.plan.n_reshards}"

@@ -7,10 +7,16 @@ Fig. 1b: all traffic through rank 0) against the balanced collective
 lowering — the beyond-paper optimization quantified in EXPERIMENTS.md
 §Perf-A.
 
+This example doubles as the **legacy-shim demonstration**: the final
+execution check runs once through ``omp.compile`` (the current API)
+and once through the deprecated ``omp.to_mpi`` shim, showing that the
+shim emits a ``DeprecationWarning`` and produces identical results.
+
 Run:  PYTHONPATH=src python examples/polybench_transform.py
 """
 import os
 import sys
+import warnings
 
 import jax
 import numpy as np
@@ -60,13 +66,26 @@ def main() -> None:
     print()
     print(render_plan(p_col))
 
-    # execute both and verify against the shared-memory reference
+    # execute and verify against the shared-memory reference, through
+    # the current API and through the deprecated shim (same result,
+    # plus a DeprecationWarning pointing at omp.compile)
     mesh = make_mesh((len(jax.devices()),), ("data",))
     ref = gemm(env)
-    out = omp.to_mpi(gemm, mesh)(env)
+    out = omp.compile(gemm, mesh, lowering="collective")(env)
     np.testing.assert_allclose(np.asarray(out["C"]), np.asarray(ref["C"]),
                                rtol=1e-4, atol=1e-4)
     print("\nexecution check (collective lowering): OK")
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = omp.to_mpi(gemm, mesh)(env)
+    deprecations = [w for w in caught
+                    if issubclass(w.category, DeprecationWarning)]
+    assert deprecations
+    np.testing.assert_allclose(np.asarray(legacy["C"]),
+                               np.asarray(out["C"]), rtol=1e-6)
+    print("legacy omp.to_mpi shim: DeprecationWarning emitted "
+          f"({deprecations[0].message}), output identical")
 
 
 if __name__ == "__main__":

@@ -41,10 +41,12 @@ def main() -> None:
     ref = block2(block1(env))
     print(f"OpenMP reference:   pi ~= {float(ref['total']):.6f}")
 
-    # 2) the OMP2MPI transformation
+    # 2) the OMP2MPI transformation — the staged compiler pipeline
+    #    (analyze -> schedule -> plan -> plan_comm -> lower)
     mesh = make_mesh((len(jax.devices()),), ("data",))
-    d1 = omp.to_mpi(block1, mesh, env_like=env)
-    d2 = omp.to_mpi(block2, mesh, env_like=block1(env))
+    d1 = omp.compile(block1, mesh, env_like=env)
+    d2 = omp.compile(block2, mesh, env_like=block1(env))
+    print("\npipeline:", " -> ".join(p.name for p in d1.passes))
 
     # 3) the generated "MPI program" report (paper Tables 2/3 analogue)
     print()

@@ -10,7 +10,7 @@ builds the multi-block program
     // #pragma omp parallel for reduction(+: total)
 
 as ONE :class:`~repro.core.pragma.ParallelRegion`, transforms it with
-``omp.region_to_mpi``, prints the inter-loop residency plan (which
+``omp.compile`` (fused lowering), prints the inter-loop residency plan (which
 buffers stay distributed across loop boundaries, which need a minimal
 reshard), and verifies the fused execution against the shared-memory
 reference — then contrasts its collective traffic with the paper's
@@ -66,9 +66,10 @@ def main() -> None:
     print(f"OpenMP reference:   ||y|| ~= "
           f"{float(jnp.sum(ref['y'] ** 2)):.6f}")
 
-    # 2) the whole-program transformation
+    # 2) the whole-program transformation (Lowering.FUSED is the
+    #    default: ONE shard_map, arrays resident between loops)
     mesh = make_mesh((len(jax.devices()),), ("data",))
-    dist = omp.region_to_mpi(program, mesh, env_like=env)
+    dist = omp.compile(program, mesh, env_like=env)
 
     # 3) the residency plan — the whole-program analogue of Tables 2/3
     print()
@@ -85,7 +86,7 @@ def main() -> None:
 
     # 5) contrast with the paper's per-loop staging (plan estimates;
     #    measured HLO counts live in benchmarks/region_chains.py)
-    staged = omp.region_to_mpi(program, mesh, fuse=False)
+    staged = omp.compile(program, mesh, lowering="collective")
     out_staged = staged(env)
     np.testing.assert_allclose(np.asarray(out_staged["y"]),
                                np.asarray(ref["y"]), rtol=1e-4, atol=1e-4)

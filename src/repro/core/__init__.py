@@ -2,6 +2,8 @@
 
 The paper's compiler pipeline, stage by stage:
 
+* :mod:`repro.core.api`       — the compiler driver: ``omp.compile``,
+  ``Options``, the staged pass pipeline and the compilation cache,
 * :mod:`repro.core.pragma`    — the OpenMP annotation surface,
 * :mod:`repro.core.context`   — Context Analysis (IN/OUT/INOUT, §3.1.1),
 * :mod:`repro.core.loop`      — Loop Analysis (§3.1.2),

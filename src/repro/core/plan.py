@@ -1,9 +1,18 @@
 """Workload-distribution planning (paper §3.1.3).
 
-``make_plan`` fuses the three analysis stages (loop, context, schedule)
-into a :class:`DistPlan`: one strategy per shared variable plus the chunk
-assignment.  The strategies are the TPU-native renditions of the paper's
-transfer rules:
+The planning work is organised as the first three passes of the
+:func:`repro.core.api.compile` pipeline:
+
+* :func:`analyze_program`  — the **analyze** pass: loop/nest
+  canonicalisation (§3.1.2) + context analysis (§3.1.1),
+* :func:`plan_schedule`    — the **schedule** pass: chunking math
+  (§3.1.3, Table 2),
+* :func:`decide_strategies` — the **plan** pass: one transfer strategy
+  per shared variable, fused into a :class:`DistPlan`.
+
+``make_plan`` composes the three (the historical single-call surface,
+still used by the region planner).  The strategies are the TPU-native
+renditions of the paper's transfer rules:
 
 ==================  =====================================================
 strategy            paper rule it implements
@@ -36,7 +45,8 @@ import dataclasses
 from typing import Any, Mapping
 
 from repro.core import context as ctx_mod
-from repro.core import pragma, schedule
+from repro.core import pragma
+from repro.core import schedule as schedule_mod
 from repro.core.context import ReadKind, VarClass, WriteKind
 from repro.core.loop import LoopInfo, LoopNotCanonical, analyze_loop
 from repro.core.nest import LoopNest, NestAffine
@@ -100,7 +110,7 @@ class VarDecision:
 class DistPlan:
     name: str
     loop: LoopInfo
-    chunks: schedule.ChunkPlan
+    chunks: schedule_mod.ChunkPlan
     vars: dict[str, VarDecision]
     axis: str | tuple
     lowering: str
@@ -133,31 +143,43 @@ class DistPlan:
         return [k for k, v in self.vars.items() if v.in_strategy == "replicate"]
 
 
-def make_plan(
+def analyze_program(
     program: pragma.ParallelFor,
     env: Mapping[str, Any],
+) -> tuple[LoopNest, ctx_mod.ContextInfo]:
+    """Compiler pass **analyze**: canonicalise the loop nest (§3.1.2)
+    and run Context Analysis over the traced body (§3.1.1).
+
+    Returns the :class:`LoopNest` IR plus the per-buffer
+    :class:`~repro.core.context.ContextInfo` — the artifact every later
+    pass consumes."""
+    nest = LoopNest.from_program(program)
+    ctx = ctx_mod.analyze_context(program, env, nest)
+    return nest, ctx
+
+
+def plan_schedule(
+    program: pragma.ParallelFor,
+    nest: LoopNest,
     num_devices: int | tuple,
     *,
-    axis: str | tuple = "data",
     lowering: str = "collective",
-    shard_inputs: bool = False,
     paper_master_excluded: bool | None = None,
-) -> DistPlan:
-    if lowering not in ("collective", "master_worker"):
-        raise ValueError(f"unknown lowering {lowering!r}")
-    if program.rank == 2:
-        return _make_plan2(
-            program, env, num_devices, axis=axis, lowering=lowering,
-            shard_inputs=shard_inputs)
-    if isinstance(axis, tuple) or isinstance(num_devices, tuple):
-        raise LoopNotCanonical(
-            "a 2-D mesh axis tuple needs a collapse=2 nest; transform "
-            "rank-1 loops over a single named axis")
+    schedule: pragma.Schedule | None = None,
+) -> tuple:
+    """Compiler pass **schedule**: the chunking math of §3.1.3 (Table 2)
+    as per-axis :class:`~repro.core.schedule.ChunkPlan`\\ s.
+
+    ``schedule`` overrides the program's own clause (the
+    :class:`~repro.core.api.Options` schedule override); ``None`` keeps
+    the clause written on the pragma."""
+    if nest.rank == 2:
+        scheds = ((schedule,) * nest.rank if schedule is not None
+                  else program.schedules)
+        return schedule_mod.make_nest_chunk_plans(nest, scheds, num_devices)
+    sched = schedule if schedule is not None else program.schedule
     if paper_master_excluded is None:
         paper_master_excluded = lowering == "master_worker"
-
-    loop = analyze_loop(program.start, program.stop, program.step)
-    ctx = ctx_mod.analyze_context(program, env, loop)
 
     compute_devices = num_devices
     if lowering == "master_worker":
@@ -173,10 +195,72 @@ def make_plan(
         if paper_master_excluded:
             compute_devices = num_devices - 1
 
-    chunks = schedule.make_chunk_plan(
-        loop, program.schedule, compute_devices,
+    return (schedule_mod.make_chunk_plan(
+        nest.axes[0], sched, compute_devices,
         paper_master_excluded=False,  # already folded into compute_devices
-    )
+    ),)
+
+
+def make_plan(
+    program: pragma.ParallelFor,
+    env: Mapping[str, Any],
+    num_devices: int | tuple,
+    *,
+    axis: str | tuple = "data",
+    lowering: str = "collective",
+    shard_inputs: bool = False,
+    paper_master_excluded: bool | None = None,
+    schedule: pragma.Schedule | None = None,
+) -> DistPlan:
+    """analyze → schedule → plan, composed (the historical one-call
+    planning surface; :func:`repro.core.api.compile` runs the passes
+    individually so each artifact is recorded)."""
+    if lowering not in ("collective", "master_worker"):
+        raise ValueError(f"unknown lowering {lowering!r}")
+    if program.rank == 2:
+        if lowering != "collective":
+            raise LoopNotCanonical(
+                "collapse=2 nests only lower through the collective path "
+                "(the paper's master/worker staging is rank-1 only)")
+        if not isinstance(axis, tuple) or len(axis) != 2:
+            raise ValueError(
+                f"collapse=2 needs a 2-tuple of mesh axes, got {axis!r}")
+        if not isinstance(num_devices, tuple) or len(num_devices) != 2:
+            raise ValueError(
+                f"collapse=2 needs per-axis device counts, got {num_devices!r}")
+    elif isinstance(axis, tuple) or isinstance(num_devices, tuple):
+        raise LoopNotCanonical(
+            "a 2-D mesh axis tuple needs a collapse=2 nest; transform "
+            "rank-1 loops over a single named axis")
+
+    nest, ctx = analyze_program(program, env)
+    chunks_axes = plan_schedule(
+        program, nest, num_devices, lowering=lowering,
+        paper_master_excluded=paper_master_excluded, schedule=schedule)
+    return decide_strategies(
+        program, nest, ctx, chunks_axes, axis=axis, lowering=lowering,
+        shard_inputs=shard_inputs)
+
+
+def decide_strategies(
+    program: pragma.ParallelFor,
+    nest: LoopNest,
+    ctx: ctx_mod.ContextInfo,
+    chunks_axes: tuple,
+    *,
+    axis: str | tuple = "data",
+    lowering: str = "collective",
+    shard_inputs: bool = False,
+) -> DistPlan:
+    """Compiler pass **plan**: fold the analyze + schedule artifacts into
+    one transfer strategy per shared variable (paper §3.1.3's workload
+    distribution decisions), returning the :class:`DistPlan`."""
+    if nest.rank == 2:
+        return _decide_strategies2(
+            program, nest, ctx, chunks_axes, axis=axis, lowering=lowering,
+            shard_inputs=shard_inputs)
+    loop = nest.axes[0]
+    chunks = chunks_axes[0]
 
     decisions: dict[str, VarDecision] = {}
     t = loop.trip_count
@@ -310,10 +394,11 @@ def make_plan(
 # ---------------------------------------------------------------------------
 
 
-def _make_plan2(
+def _decide_strategies2(
     program: pragma.ParallelFor,
-    env: Mapping[str, Any],
-    num_devices: int | tuple,
+    nest: LoopNest,
+    ctx: ctx_mod.ContextInfo,
+    chunks_axes: tuple,
     *,
     axis: str | tuple,
     lowering: str,
@@ -323,23 +408,8 @@ def _make_plan2(
     chunk-distributed along nest axis ``d`` over mesh axis ``axis[d]``
     (the diagonal assignment; swapped/strided maps fall back to the
     paper's replicate/reject rules)."""
-    if lowering != "collective":
-        raise LoopNotCanonical(
-            "collapse=2 nests only lower through the collective path "
-            "(the paper's master/worker staging is rank-1 only)")
-    if not isinstance(axis, tuple) or len(axis) != 2:
-        raise ValueError(
-            f"collapse=2 needs a 2-tuple of mesh axes, got {axis!r}")
-    if not isinstance(num_devices, tuple) or len(num_devices) != 2:
-        raise ValueError(
-            f"collapse=2 needs per-axis device counts, got {num_devices!r}")
-
-    nest = LoopNest.from_program(program)
-    ctx = ctx_mod.analyze_context(program, env, nest)
     trips = nest.trip_counts
     total = nest.total_trip
-    chunks_axes = schedule.make_nest_chunk_plans(
-        nest, program.schedules, num_devices)
 
     decisions: dict[str, VarDecision] = {}
     for key, info in ctx.vars.items():

@@ -25,11 +25,13 @@ whole:
   - serial glue stages run redundantly on every rank over replicated
     buffers (only their declared reads are materialised).
 
-* :func:`region_to_mpi` — the transformation entry point.  The
-  ``"collective"`` lowering fuses the whole region into **one**
-  ``shard_map`` so resident buffers never leave their device; the
-  ``"master_worker"`` lowering (and ``fuse=False``) keeps the paper's
-  per-loop staging as the measurable baseline (EXPERIMENTS.md §Perf-C).
+* :class:`DistributedRegion` — the executor
+  (:func:`repro.core.api.compile` is the entry point; the historical
+  :func:`region_to_mpi` remains as a deprecation shim).
+  ``Lowering.FUSED`` fuses the whole region into **one** ``shard_map``
+  so resident buffers never leave their device; ``MASTER_WORKER`` (and
+  per-loop ``COLLECTIVE``) keep the paper's per-loop staging as the
+  measurable baseline (EXPERIMENTS.md §Perf-C).
 
 Boundary lowering is delegated to the cost-modeled communication
 planner (:mod:`repro.core.comm`): each slab→consumer handoff becomes
@@ -61,6 +63,7 @@ from repro.core import comm as comm_mod
 from repro.core import nest as nest_mod
 from repro.core import pragma, reduction as red_mod
 from repro.core import transform as tf
+from repro.core.context import _aval_of
 from repro.core.comm import (  # noqa: F401 (re-export)
     BoundaryComm,
     SlabLayout,
@@ -130,13 +133,6 @@ class RegionPlan:
         return total
 
 
-def _aval_of(x: Any) -> jax.ShapeDtypeStruct:
-    if isinstance(x, jax.ShapeDtypeStruct):
-        return x
-    arr = jnp.asarray(x)
-    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
-
-
 # ---------------------------------------------------------------------------
 # The residency planner
 # ---------------------------------------------------------------------------
@@ -162,6 +158,7 @@ def plan_region(
     *,
     axis: str | tuple = "data",
     comm: str = "auto",
+    schedule: pragma.Schedule | None = None,
 ) -> RegionPlan:
     """Match each loop's OUT layout against the next loop's IN needs,
     lowering each slab boundary through the cost-modeled communication
@@ -214,7 +211,8 @@ def plan_region(
             continue
 
         plan = make_plan(stage, env_shapes, num_devices, axis=axis,
-                         lowering="collective", shard_inputs=True)
+                         lowering="collective", shard_inputs=True,
+                         schedule=schedule)
         t = plan.nest.total_trip
         if t == 0:
             # Zero-trip loop: the executor only folds reduction
@@ -441,6 +439,8 @@ class DistributedRegion:
     unroll_chunks: bool = False
     paper_master_excluded: bool | None = None
     comm: str = "auto"                  # boundary planner mode
+    schedule_override: pragma.Schedule | None = None
+    stage_plans: tuple | None = None    # staged path: per-loop (name, plan)
 
     def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
         env = {k: jnp.asarray(v) for k, v in env.items()}
@@ -449,23 +449,32 @@ class DistributedRegion:
         if self.plan is None:
             self.plan = plan_region(
                 self.region, env, tf.mesh_axis_sizes(self.mesh, self.axis),
-                axis=self.axis, comm=self.comm)
+                axis=self.axis, comm=self.comm,
+                schedule=self.schedule_override)
         return _execute_region(self, env)
 
     def _run_staged(self, env: dict) -> dict:
         """Paper-faithful baseline: each loop transformed in isolation
-        (data returns to replicated form between stages)."""
+        (data returns to replicated form between stages).  When the
+        compile pipeline pre-planned the stages (``stage_plans``), those
+        exact plans execute — no re-planning per call."""
         out = dict(env)
+        plans = iter(self.stage_plans) if self.stage_plans is not None \
+            else None
         for stage in self.region.stages:
             if isinstance(stage, pragma.SerialStage):
                 out = stage(out)
-            else:
-                out = tf.to_mpi(
-                    stage, self.mesh, axis=self.axis, lowering=self.lowering,
-                    shard_inputs=self.shard_inputs,
-                    unroll_chunks=self.unroll_chunks,
-                    paper_master_excluded=self.paper_master_excluded,
-                )(out)
+                continue
+            plan = None
+            if plans is not None:
+                _, plan = next(plans)
+            out = tf.DistributedProgram(
+                program=stage, mesh=self.mesh, plan=plan, axis=self.axis,
+                lowering=self.lowering, shard_inputs=self.shard_inputs,
+                unroll_chunks=self.unroll_chunks,
+                paper_master_excluded=self.paper_master_excluded,
+                schedule_override=self.schedule_override,
+            )(out)
         return out
 
     def report(self) -> str:
@@ -490,46 +499,45 @@ def region_to_mpi(
     env_like: Mapping[str, Any] | None = None,
     paper_master_excluded: bool | None = None,
     comm: str = "auto",
-) -> DistributedRegion:
-    """Transform a whole :class:`~repro.core.pragma.ParallelRegion`.
+):
+    """Deprecated: use ``omp.compile(region, mesh, omp.Options(...))``.
 
-    ``lowering="collective"`` + ``fuse=True`` (default) emits ONE fused
-    shard_map with inter-loop residency; ``fuse=False`` or
-    ``lowering="master_worker"`` stage each loop in isolation — the
-    paper's per-loop pattern, kept as the measurable baseline.
-
-    A rank-2 region (every loop ``collapse=2``) distributes over a 2-D
-    mesh: ``axis`` is a 2-tuple of mesh axes, defaulting to
-    ``("i", "j")`` when present.
-
-    ``comm`` selects the boundary planner mode: ``"auto"`` (default)
-    lowers each slab boundary to the cheapest of resident / halo
-    ``ppermute`` / all_gather / replicate by the
-    :mod:`repro.core.comm` cost model; ``"gather"`` pins the PR 1
-    all-gather-only baseline (EXPERIMENTS.md §Perf-D).
+    Thin shim: translates the legacy kwargs to
+    :class:`~repro.core.api.Options` — ``fuse=True`` +
+    ``lowering="collective"`` becomes ``Lowering.FUSED``,
+    ``fuse=False`` becomes ``Lowering.COLLECTIVE`` — and returns the
+    :class:`~repro.core.api.Compiled` artifact (callable like the
+    ``DistributedRegion`` it used to return, with ``.plan`` /
+    ``.report()`` intact).
     """
+    import warnings
+
+    from repro.core import api
+
+    warnings.warn(
+        "omp.region_to_mpi() is deprecated; use omp.compile(region, mesh, "
+        "omp.Options(lowering=..., comm=...)) instead",
+        DeprecationWarning, stacklevel=2)
     if isinstance(region, pragma.ParallelFor):
         region = pragma.ParallelRegion((region,))
-    axis, num = tf.resolve_axes(region, mesh, axis)
-    if lowering not in ("collective", "master_worker"):
-        raise ValueError(f"unknown lowering {lowering!r}")
-    if comm not in comm_mod.COMM_MODES:
-        raise ValueError(
-            f"unknown comm mode {comm!r}; expected {comm_mod.COMM_MODES}")
     if lowering == "master_worker":
-        if region.rank == 2:
-            raise LoopNotCanonical(
-                "collapse=2 regions only lower through the collective "
-                "path (the paper's master/worker staging is rank-1 only)")
-        fuse = False
-    plan = None
-    if env_like is not None and lowering == "collective" and fuse:
-        plan = plan_region(region, env_like, num, axis=axis, comm=comm)
-    return DistributedRegion(
-        region=region, mesh=mesh, plan=plan, axis=axis, lowering=lowering,
-        fuse=fuse, shard_inputs=shard_inputs, unroll_chunks=unroll_chunks,
-        paper_master_excluded=paper_master_excluded, comm=comm,
+        low = api.Lowering.MASTER_WORKER
+    elif lowering != "collective":
+        raise api.CompileError(f"unknown lowering {lowering!r}")
+    elif fuse:
+        low = api.Lowering.FUSED
+    else:
+        low = api.Lowering.COLLECTIVE
+    options = api.Options(
+        axis=axis,
+        lowering=low,
+        comm=comm,
+        shard=(api.ShardPolicy.SLICE if shard_inputs
+               else api.ShardPolicy.REPLICATE),
+        unroll_chunks=unroll_chunks,
+        paper_master_excluded=paper_master_excluded,
     )
+    return api.compile(region, mesh, options, env_like=env_like)
 
 
 # ---------------------------------------------------------------------------

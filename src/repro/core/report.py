@@ -113,6 +113,38 @@ def render_plan(plan: DistPlan) -> str:
     return "\n".join(lines)
 
 
+def render_compiled(compiled) -> str:
+    """Render the unified :class:`~repro.core.api.Compiled` artifact:
+    the pass pipeline header followed by the plan view the legacy
+    entry points rendered (per-block Tables 2/3 analogue or the
+    whole-region residency report)."""
+    from repro.core.region import RegionPlan
+
+    lines = [
+        f"=== omp.compile: {compiled.program.name} ===",
+        f"options         : {compiled.options.describe()}",
+        f"mesh axis       : {compiled.axis!r} "
+        f"({compiled.num_devices} compute ranks)",
+        "",
+        "pass pipeline (analyze -> schedule -> plan -> plan_comm -> lower):",
+    ]
+    for pr in compiled.passes:
+        lines.append(f"  {pr.describe()}")
+    lines.append("")
+    plan = compiled.plan
+    if isinstance(plan, RegionPlan):
+        lines.append(render_region(plan))
+    elif isinstance(plan, DistPlan):
+        lines.append(render_plan(plan))
+    else:  # staged region: per-stage plans, each loop in isolation
+        lines.append("staged lowering: each loop transformed in isolation "
+                     "(paper Fig. 1b round trips)")
+        for name, p in plan:
+            lines.append("")
+            lines.append(render_plan(p))
+    return "\n".join(lines)
+
+
 def render_region(rp) -> str:
     """Render a :class:`~repro.core.region.RegionPlan` — the whole-program
     analogue of the per-block report: stage roster, the residency

@@ -4,11 +4,11 @@ Two executors for a :class:`~repro.core.pragma.ParallelFor` program:
 
 * :func:`run_reference` — the *shared-memory* ("OpenMP") semantics on the
   local device.  This is the oracle: the paper's "correct by construction"
-  claim is validated as ``to_mpi(pf)(env) == pf(env)``.
+  claim is validated as ``omp.compile(pf, mesh)(env) == pf(env)``.
 
-* :func:`to_mpi` — the transformation.  Produces a
-  :class:`DistributedProgram` that executes the block over a mesh axis
-  under ``jax.shard_map`` using the :class:`~repro.core.plan.DistPlan`
+* :class:`DistributedProgram` (built by :func:`repro.core.api.compile`'s
+  **lower** pass) — executes the block over a mesh axis under
+  ``jax.shard_map`` using the :class:`~repro.core.plan.DistPlan`
   strategies.  Two lowerings:
 
   - ``"collective"`` — TPU-native: chunk-cyclic layout + balanced
@@ -21,11 +21,14 @@ Two executors for a :class:`~repro.core.pragma.ParallelFor` program:
     exists as the measurable baseline for EXPERIMENTS.md §Perf-A.
 
 Both executors transform ONE block.  Whole programs (chains of blocks
-with inter-loop residency planning) go through
-:func:`repro.core.region.region_to_mpi`, which reuses this module's
+with inter-loop residency planning) compile to a
+:class:`repro.core.region.DistributedRegion`, which reuses this module's
 chunk-execution machinery (`_run_local_chunks`) inside a single fused
 shard_map; per-loop staging via this module is its measurable baseline
 (EXPERIMENTS.md §Perf-C).
+
+The public surface is :func:`repro.core.api.compile`; :func:`to_mpi`
+remains as a deprecation shim over it.
 """
 from __future__ import annotations
 
@@ -159,9 +162,9 @@ class DistributedProgram:
     axis: str = "data"
     lowering: str = "collective"
     shard_inputs: bool = False
-    keep_sharded: bool = False
     unroll_chunks: bool = False
     paper_master_excluded: bool | None = None
+    schedule_override: pragma.Schedule | None = None
 
     def __call__(self, env: Mapping[str, Any]) -> dict:
         return _execute(self, {k: jnp.asarray(v) for k, v in env.items()})
@@ -228,29 +231,33 @@ def to_mpi(
     unroll_chunks: bool = False,
     env_like: Mapping[str, Any] | None = None,
     paper_master_excluded: bool | None = None,
-) -> DistributedProgram:
-    """Transform an OpenMP-annotated block into a distributed program.
+):
+    """Deprecated: use ``omp.compile(program, mesh, omp.Options(...))``.
 
-    A ``collapse=2`` nest takes a 2-tuple of mesh axes (nest axis ``d``
-    is dealt over ``axis[d]``); the default is ``("i", "j")`` when both
-    exist in the mesh, else the first two mesh axes.  ``env_like``
-    (shapes only) lets the plan be built eagerly; otherwise it is built
-    on first call.
+    Thin shim: translates the legacy kwargs to
+    :class:`~repro.core.api.Options` and returns the
+    :class:`~repro.core.api.Compiled` artifact (callable like the
+    ``DistributedProgram`` it used to return, with ``.plan`` /
+    ``.report()`` intact).
     """
-    axis, num = resolve_axes(program, mesh, axis)
-    plan = None
-    if env_like is not None:
-        plan = make_plan(
-            program, env_like, num, axis=axis, lowering=lowering,
-            shard_inputs=shard_inputs,
-            paper_master_excluded=paper_master_excluded,
-        )
-    return DistributedProgram(
-        program=program, mesh=mesh, plan=plan, axis=axis, lowering=lowering,
-        shard_inputs=shard_inputs, keep_sharded=keep_sharded,
+    import warnings
+
+    from repro.core import api
+
+    warnings.warn(
+        "omp.to_mpi() is deprecated; use omp.compile(program, mesh, "
+        "omp.Options(lowering=..., shard=...)) instead",
+        DeprecationWarning, stacklevel=2)
+    options = api.Options(
+        axis=axis,
+        lowering=lowering,
+        shard=(api.ShardPolicy.SLICE if shard_inputs
+               else api.ShardPolicy.REPLICATE),
+        keep_sharded=keep_sharded,
         unroll_chunks=unroll_chunks,
         paper_master_excluded=paper_master_excluded,
     )
+    return api.compile(program, mesh, options, env_like=env_like)
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +272,7 @@ def _execute(dp: DistributedProgram, env: dict) -> dict:
             program, env, mesh_axis_sizes(dp.mesh, dp.axis), axis=dp.axis,
             lowering=dp.lowering, shard_inputs=dp.shard_inputs,
             paper_master_excluded=dp.paper_master_excluded,
+            schedule=dp.schedule_override,
         )
     plan = dp.plan
     t = plan.nest.total_trip

@@ -6,9 +6,28 @@ Mirrors the OpenMP surface the paper consumes:
   annotates a loop body — the ``#pragma omp parallel for target mpi``.
 * calling the resulting program runs the *shared-memory* semantics
   (the original OpenMP program);
-* ``omp.to_mpi(program, mesh)`` performs the source-to-source
-  transformation and returns the distributed ("MPI") program.
+* ``omp.compile(program, mesh, omp.Options(...))`` performs the
+  source-to-source transformation through the staged pass pipeline
+  (``analyze → schedule → plan → plan_comm → lower``) and returns the
+  distributed ("MPI") program as a :class:`~repro.core.api.Compiled`
+  artifact.  It accepts a single ``ParallelFor`` block or a whole
+  ``ParallelRegion``.
+
+``omp.to_mpi`` / ``omp.region_to_mpi`` are deprecated shims over
+``omp.compile`` and emit ``DeprecationWarning``.
 """
+from repro.core.api import (  # noqa: F401
+    CommMode,
+    Compiled,
+    CompileError,
+    Lowering,
+    Options,
+    PassRecord,
+    ShardPolicy,
+    clear_compile_cache,
+    compile,
+    compile_cache_stats,
+)
 from repro.core.context import (  # noqa: F401
     Affine,
     ContextInfo,

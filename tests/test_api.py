@@ -1,0 +1,441 @@
+"""The staged compiler API: ``omp.compile`` / ``omp.Options``.
+
+Pins the ISSUE 4 redesign surface:
+
+* Options validation — typed enums, actionable ``CompileError``s, the
+  one diagnostics path for option × program mismatches (master_worker ×
+  rank-2, ``keep_sharded``, slice × master_worker),
+* the legacy ``to_mpi`` / ``region_to_mpi`` shims — they must emit
+  ``DeprecationWarning`` and produce results identical to
+  ``omp.compile`` on representative programs,
+* compilation-cache semantics — hits on structural repeats, misses on
+  distinct meshes / mutated env shapes / different options,
+* ``.passes`` artifact integrity — the analyze → schedule → plan →
+  plan_comm → lower chain with real artifacts at every stage.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import omp
+from repro.compat import make_mesh
+from repro.core.plan import DistPlan
+from repro.core.region import RegionPlan
+
+
+def mesh1():
+    return make_mesh((len(jax.devices()),), ("data",))
+
+
+def _map_block(n=16, name="mapb"):
+    @omp.parallel_for(stop=n, schedule=omp.dynamic(), name=name)
+    def block(i, env):
+        return {"y": omp.at(i, env["x"][i] * 2.0 + 1.0)}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    return block, env
+
+
+def _chain_region(n=16):
+    @omp.parallel_for(stop=n, name="c1")
+    def l1(i, env):
+        return {"tmp": omp.at(i, env["x"][i] * 2.0)}
+
+    @omp.parallel_for(stop=n, reduction={"tot": "+"}, name="c2")
+    def l2(i, env):
+        return {"tot": omp.red(env["tmp"][i])}
+
+    reg = omp.region(l1, l2, name="chain")
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "tmp": jnp.zeros(n, jnp.float32), "tot": jnp.float32(0)}
+    return reg, env
+
+
+def _nest2(n=6, m=6):
+    @omp.parallel_for(stop=(n, m), collapse=2, name="nest2")
+    def block(i, j, env):
+        return {"C": omp.at((i, j), env["A"][i, j] + 1.0)}
+
+    env = {"A": jnp.arange(n * m, dtype=jnp.float32).reshape(n, m),
+           "C": jnp.zeros((n, m), jnp.float32)}
+    return block, env
+
+
+# ---------------------------------------------------------------------------
+# Options validation
+# ---------------------------------------------------------------------------
+
+
+def test_options_accepts_strings_and_enums():
+    o = omp.Options(lowering="collective", comm="gather", shard="slice")
+    assert o.lowering is omp.Lowering.COLLECTIVE
+    assert o.comm is omp.CommMode.GATHER
+    assert o.shard is omp.ShardPolicy.SLICE
+    o2 = omp.Options(lowering=omp.Lowering.MASTER_WORKER)
+    assert o2.lowering is omp.Lowering.MASTER_WORKER
+    assert o2.schedule is None
+
+
+def test_options_rejects_unknown_values_with_valid_list():
+    with pytest.raises(omp.CompileError, match="fused"):
+        omp.Options(lowering="bogus")
+    with pytest.raises(omp.CompileError, match="gather"):
+        omp.Options(comm="bcast")
+    with pytest.raises(omp.CompileError, match="slice"):
+        omp.Options(shard=7)
+    with pytest.raises(omp.CompileError, match="Schedule"):
+        omp.Options(schedule=42)
+    with pytest.raises(omp.CompileError, match="axis"):
+        omp.Options(axis=("i", "i"))
+    with pytest.raises(omp.CompileError, match="axis"):
+        omp.Options(axis=3)
+
+
+def test_compile_error_is_loop_not_canonical_and_value_error():
+    # the one diagnostics path must satisfy every legacy except clause
+    assert issubclass(omp.CompileError, omp.LoopNotCanonical)
+    assert issubclass(omp.CompileError, ValueError)
+
+
+def test_options_schedule_override_changes_chunking():
+    block, env = _map_block()
+    c = omp.compile(block, mesh1(), env_like=env,
+                    options=None, schedule=omp.static(4))
+    assert c.plan.chunks.chunk == 4
+    c2 = omp.compile(block, mesh1(), env_like=env)
+    assert c2.plan.chunks.chunk != 4   # dynamic default: N/P/10 -> 1
+    # results unchanged — schedules only move work, never values
+    np.testing.assert_allclose(np.asarray(c(env)["y"]),
+                               np.asarray(c2(env)["y"]))
+
+
+def test_options_and_overrides_are_exclusive():
+    block, env = _map_block()
+    with pytest.raises(omp.CompileError, match="not both"):
+        omp.compile(block, mesh1(), omp.Options(), lowering="collective")
+
+
+def test_compile_rejects_non_programs():
+    with pytest.raises(omp.CompileError, match="ParallelFor"):
+        omp.compile(lambda e: e, mesh1())
+
+
+def test_master_worker_rank2_single_diagnostics_path():
+    block, env = _nest2()
+    mesh = make_mesh((1, 1), ("i", "j"))
+    with pytest.raises(omp.CompileError, match="rank-1 only"):
+        omp.compile(block, mesh, lowering="master_worker")
+
+
+def test_master_worker_slice_rejected():
+    block, env = _map_block()
+    with pytest.raises(omp.CompileError, match="SLICE"):
+        omp.compile(block, mesh1(), lowering="master_worker",
+                    shard="slice")
+
+
+# ---------------------------------------------------------------------------
+# keep_sharded kwargs drift (ISSUE 4 satellite): one behavior, loudly
+# ---------------------------------------------------------------------------
+
+
+def test_keep_sharded_rejected_uniformly():
+    block, env = _map_block()
+    # at Options construction ...
+    with pytest.raises(omp.CompileError, match="keep_sharded"):
+        omp.Options(keep_sharded=True)
+    # ... and through the legacy shim, which used to silently ignore it
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(omp.CompileError, match="keep_sharded"):
+            omp.to_mpi(block, mesh1(), keep_sharded=True)
+    # region_to_mpi never grew the kwarg; the unified surface has one
+    # sharded-exit story for both program kinds (the FUSED lowering)
+    with pytest.raises(omp.CompileError, match="FUSED"):
+        omp.Options(keep_sharded=True)
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims: DeprecationWarning + output equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_to_mpi_shim_warns_and_matches_compile():
+    block, env = _map_block()
+    mesh = mesh1()
+    with pytest.warns(DeprecationWarning, match="omp.compile"):
+        legacy = omp.to_mpi(block, mesh, shard_inputs=True)
+    new = omp.compile(block, mesh, lowering="collective", shard="slice")
+    np.testing.assert_allclose(np.asarray(legacy(env)["y"]),
+                               np.asarray(new(env)["y"]))
+    # the shim returns the unified artifact with the translated options
+    assert isinstance(legacy, omp.Compiled)
+    assert legacy.options.shard is omp.ShardPolicy.SLICE
+    assert legacy.options.lowering is omp.Lowering.COLLECTIVE
+
+
+def test_region_to_mpi_shim_warns_and_matches_compile():
+    reg, env = _chain_region()
+    mesh = mesh1()
+    with pytest.warns(DeprecationWarning, match="omp.compile"):
+        legacy = omp.region_to_mpi(reg, mesh, env_like=env)
+    new = omp.compile(reg, mesh, env_like=env)
+    for k in ("tmp", "tot"):
+        np.testing.assert_allclose(np.asarray(legacy(env)[k]),
+                                   np.asarray(new(env)[k]), rtol=1e-6)
+    assert legacy.options.lowering is omp.Lowering.FUSED
+    # and the legacy fuse=False spelling maps onto COLLECTIVE staging
+    with pytest.warns(DeprecationWarning):
+        staged = omp.region_to_mpi(reg, mesh, fuse=False)
+    assert staged.options.lowering is omp.Lowering.COLLECTIVE
+    np.testing.assert_allclose(np.asarray(staged(env)["tot"]),
+                               np.asarray(new(env)["tot"]), rtol=1e-6)
+
+
+def test_region_to_mpi_shim_rejects_unknown_lowering():
+    reg, env = _chain_region()
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="unknown lowering"):
+            omp.region_to_mpi(reg, mesh1(), lowering="collectve")
+
+
+def test_staged_region_host_side_glue_still_runs():
+    """The staged lowering executes serial glue eagerly on concrete
+    arrays, so host-side glue (numpy round trip) must keep working:
+    shape tracing fails at plan time and the remaining stages fall back
+    to the historical run-time planning."""
+    n = 8
+
+    @omp.parallel_for(stop=n, name="hg1")
+    def l1(i, env):
+        return {"tmp": omp.at(i, env["x"][i] * 2.0)}
+
+    def glue_fn(env):
+        # deliberately not traceable: concrete numpy conversion
+        total = float(np.asarray(env["tmp"]).sum())
+        return {"bias": jnp.full((1,), total, jnp.float32)}
+
+    glue = omp.serial(glue_fn, reads=("tmp",), name="hostglue")
+
+    @omp.parallel_for(stop=n, name="hg2")
+    def l2(i, env):
+        return {"y": omp.at(i, env["tmp"][i] + env["bias"][0])}
+
+    reg = omp.region(l1, glue, l2, name="hostglue_region")
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "tmp": jnp.zeros(n, jnp.float32),
+           "bias": jnp.zeros(1, jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    ref = reg(env)
+    c = omp.compile(reg, mesh1(), env_like=env, lowering="collective")
+    np.testing.assert_allclose(np.asarray(c(env)["y"]),
+                               np.asarray(ref["y"]), rtol=1e-6)
+    # the plan pass records the deferral instead of failing the compile
+    assert "not shape-traceable" in c._pass("plan").input
+    assert c._pass("lower").output.stage_plans is None
+
+
+def test_region_to_mpi_shim_wraps_bare_parallel_for():
+    block, env = _map_block()
+    with pytest.warns(DeprecationWarning):
+        legacy = omp.region_to_mpi(block, mesh1())
+    ref = block(env)
+    np.testing.assert_allclose(np.asarray(legacy(env)["y"]),
+                               np.asarray(ref["y"]))
+
+
+def test_engine_internals_are_shim_free():
+    """Compiling and running through omp.compile must not touch the
+    deprecated entry points anywhere inside src/."""
+    block, env = _map_block()
+    reg, renv = _chain_region()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        omp.compile(block, mesh1(), env_like=env)(env)
+        omp.compile(reg, mesh1(), env_like=renv)(renv)
+        omp.compile(reg, mesh1(), lowering="collective")(renv)
+
+
+# ---------------------------------------------------------------------------
+# Compilation cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_and_miss_semantics():
+    omp.clear_compile_cache()
+    block, env = _map_block()
+    mesh = mesh1()
+
+    c1 = omp.compile(block, mesh, env_like=env)
+    assert c1.cache_hit is False
+    c2 = omp.compile(block, mesh, env_like=env)
+    assert c2.cache_hit is True
+    stats = omp.compile_cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+
+    # distinct mesh (same device, different axis name) → miss
+    other = make_mesh((len(jax.devices()),), ("rows",))
+    c3 = omp.compile(block, other, axis="rows", env_like=env)
+    assert c3.cache_hit is False
+
+    # mutated env shapes → miss (the plan depends on buffer shapes)
+    env_wide = {"x": jnp.arange(32, dtype=jnp.float32),
+                "y": jnp.zeros(32, jnp.float32)}
+
+    @omp.parallel_for(stop=32, schedule=omp.dynamic(), name="mapb32")
+    def block32(i, env):
+        return {"y": omp.at(i, env["x"][i] * 2.0 + 1.0)}
+
+    c4 = omp.compile(block32, mesh, env_like=env_wide)
+    assert c4.cache_hit is False
+
+    # different options → miss
+    c5 = omp.compile(block, mesh, env_like=env, schedule=omp.static(2))
+    assert c5.cache_hit is False
+
+    # warm repeat of every variant above → all hits
+    for build in (
+        lambda: omp.compile(block, mesh, env_like=env),
+        lambda: omp.compile(block, other, axis="rows", env_like=env),
+        lambda: omp.compile(block32, mesh, env_like=env_wide),
+        lambda: omp.compile(block, mesh, env_like=env,
+                            schedule=omp.static(2)),
+    ):
+        assert build().cache_hit is True
+
+
+def test_cache_mutated_schedule_clause_misses():
+    """The polybench example mutates prog.schedule in place — the
+    structural signature must see it."""
+    omp.clear_compile_cache()
+    block, env = _map_block(name="mut")
+    mesh = mesh1()
+    omp.compile(block, mesh, env_like=env)
+    block.schedule = omp.static(2)
+    c = omp.compile(block, mesh, env_like=env)
+    assert c.cache_hit is False
+    assert c.plan.chunks.chunk == 2
+
+
+def test_cache_same_env_different_values_hits():
+    omp.clear_compile_cache()
+    block, env = _map_block()
+    mesh = mesh1()
+    omp.compile(block, mesh, env_like=env)
+    env2 = {k: v + 1.0 for k, v in env.items()}
+    c = omp.compile(block, mesh, env_like=env2)   # same shapes/dtypes
+    assert c.cache_hit is True
+    # and the cached plan still computes the right answer
+    np.testing.assert_allclose(np.asarray(c(env2)["y"]),
+                               np.asarray(block(env2)["y"]))
+
+
+def test_lazy_compile_builds_through_cache_on_first_call():
+    omp.clear_compile_cache()
+    block, env = _map_block()
+    c = omp.compile(block, mesh1())
+    assert c.cache_hit is None
+    with pytest.raises(omp.CompileError, match="env_like"):
+        _ = c.passes
+    out = c(env)
+    np.testing.assert_allclose(np.asarray(out["y"]),
+                               np.asarray(block(env)["y"]))
+    assert c.cache_hit is False and len(c.passes) == 5
+
+
+# ---------------------------------------------------------------------------
+# Pass pipeline artifacts
+# ---------------------------------------------------------------------------
+
+
+def test_passes_artifact_integrity_block():
+    block, env = _map_block()
+    c = omp.compile(block, mesh1(), env_like=env)
+    names = [p.name for p in c.passes]
+    assert names == ["analyze", "schedule", "plan", "plan_comm", "lower"]
+    assert all(p.output is not None for p in c.passes)
+
+    nest, ctx = c._pass("analyze").output
+    assert nest.rank == 1 and "x" in ctx.vars
+    chunks_axes = c._pass("schedule").output
+    assert len(chunks_axes) == 1 and chunks_axes[0].num_devices >= 1
+    plan = c._pass("plan").output
+    assert isinstance(plan, DistPlan)
+    # the plan pass consumed exactly the artifacts the earlier passes made
+    assert plan.context is ctx
+    assert plan.chunks is chunks_axes[0]
+    assert c._pass("plan_comm").output == ()
+    exe = c._pass("lower").output
+    assert callable(exe) and exe.plan is plan
+    assert c.plan is plan and c.boundaries == ()
+
+
+def test_passes_artifact_integrity_fused_region():
+    reg, env = _chain_region()
+    c = omp.compile(reg, mesh1(), env_like=env)
+    names = [p.name for p in c.passes]
+    assert names == ["analyze", "schedule", "plan", "plan_comm", "lower"]
+    rp = c.plan
+    assert isinstance(rp, RegionPlan)
+    analyzed = dict(c._pass("analyze").output)
+    assert set(analyzed) == {"c1", "c2"}
+    assert tuple(c._pass("plan_comm").output) == tuple(rp.comms)
+    assert c.boundaries == tuple(rp.comms)
+    assert c._pass("lower").output.plan is rp
+
+
+def test_passes_artifact_integrity_staged_region():
+    reg, env = _chain_region()
+    c = omp.compile(reg, mesh1(), env_like=env, lowering="collective")
+    names = [p.name for p in c.passes]
+    assert names == ["analyze", "schedule", "plan", "plan_comm", "lower"]
+    plans = dict(c._pass("plan").output)
+    assert set(plans) == {"c1", "c2"}
+    assert all(isinstance(p, DistPlan) for p in plans.values())
+    assert c.boundaries == ()
+    # the staged executor runs the very plans the pipeline recorded
+    exe = c._pass("lower").output
+    assert exe.stage_plans is c._pass("plan").output
+
+
+def test_report_and_cost_summary_from_unified_artifact():
+    block, env = _map_block()
+    c = omp.compile(block, mesh1(), env_like=env)
+    text = c.report()
+    assert "omp.compile" in text
+    assert "analyze -> schedule -> plan -> plan_comm -> lower" in text
+    assert "OMP2MPI transformation report" in text
+    cs = c.cost_summary()
+    assert cs["kind"] == "block" and cs["modeled_bytes"] > 0
+
+    reg, renv = _chain_region()
+    cr = omp.compile(reg, mesh1(), env_like=renv)
+    rtext = cr.report()
+    assert "ParallelRegion transformation report" in rtext
+    rcs = cr.cost_summary()
+    assert rcs["kind"] == "region"
+    assert {"planned_wire_bytes", "gather_wire_bytes",
+            "n_elided"} <= set(rcs)
+
+    cstag = omp.compile(reg, mesh1(), env_like=renv, lowering="collective")
+    assert cstag.cost_summary()["kind"] == "region_staged"
+    assert "staged lowering" in cstag.report()
+
+
+def test_compile_rank2_region_and_block():
+    block, env = _nest2()
+    mesh = make_mesh((1, 1), ("i", "j"))
+    ref = block(env)
+    c = omp.compile(block, mesh, env_like=env, shard="slice")
+    np.testing.assert_allclose(np.asarray(c(env)["C"]),
+                               np.asarray(ref["C"]))
+    assert c.axis == ("i", "j") and c.plan.rank == 2
+
+    reg = omp.ParallelRegion((block,), name="r2")
+    cr = omp.compile(reg, mesh, env_like=env)
+    np.testing.assert_allclose(np.asarray(cr(env)["C"]),
+                               np.asarray(ref["C"]))
+    assert isinstance(cr.plan, RegionPlan) and cr.plan.rank == 2

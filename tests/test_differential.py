@@ -8,13 +8,14 @@ offsets, reductions, ``put``, serial glue, multi-loop chains; schedules
 ``static``/``dynamic``/``guided`` with and without explicit chunk sizes,
 including zero-trip and trip_count < num_devices draws) and every
 lowering must reproduce the shared-memory reference
-(:func:`repro.core.transform.run_reference`):
+(:func:`repro.core.transform.run_reference`).  Every variant routes
+through the one entry point ``omp.compile``:
 
-* ``omp.to_mpi`` collective, with and without ``shard_inputs``,
-* ``omp.to_mpi`` master/worker (the paper's staging; needs >= 2 ranks),
-* ``omp.region_to_mpi`` fused, both ``comm="auto"`` (cost-modeled halo
+* ``Lowering.COLLECTIVE``, with ``shard`` = replicate and slice,
+* ``Lowering.MASTER_WORKER`` (the paper's staging; needs >= 2 ranks),
+* ``Lowering.FUSED`` regions, both ``comm="auto"`` (cost-modeled halo
   ``ppermute`` boundaries) and ``comm="gather"`` (the PR 1 baseline),
-  plus the ``fuse=False`` staged fallback.
+  plus the per-loop ``Lowering.COLLECTIVE`` staged fallback.
 
 Single-device examples run in-process through the (vendored) hypothesis
 ``given``; the 2/4-device sweep runs in one subprocess with forced
@@ -213,7 +214,13 @@ def make_case(seed: int, family: str | None = None):
 
 
 def check_case(seed: int, mesh, family: str | None = None) -> str:
-    """Every lowering of the drawn program must match the reference."""
+    """Every lowering of the drawn program must match the reference.
+
+    Everything routes through ``omp.compile`` — the single entry point
+    must handle every family × schedule × lowering × comm mode the
+    legacy entry points covered (those survive only as shims; their
+    equivalence is pinned in tests/test_api.py).
+    """
     from repro import omp
 
     prog, env, family = make_case(seed, family)
@@ -223,19 +230,20 @@ def check_case(seed: int, mesh, family: str | None = None) -> str:
 
     variants = {}
     if is_region:
-        variants["region_auto"] = omp.region_to_mpi(prog, mesh, comm="auto")
-        variants["region_gather"] = omp.region_to_mpi(prog, mesh,
-                                                      comm="gather")
-        variants["region_staged"] = omp.region_to_mpi(prog, mesh, fuse=False)
+        variants["region_auto"] = omp.compile(prog, mesh, comm="auto")
+        variants["region_gather"] = omp.compile(prog, mesh, comm="gather")
+        variants["region_staged"] = omp.compile(prog, mesh,
+                                                lowering="collective")
         if p >= 2:
-            variants["region_mw"] = omp.region_to_mpi(
+            variants["region_mw"] = omp.compile(
                 prog, mesh, lowering="master_worker")
     else:
-        variants["mpi"] = omp.to_mpi(prog, mesh)
-        variants["mpi_sharded"] = omp.to_mpi(prog, mesh, shard_inputs=True)
+        variants["mpi"] = omp.compile(prog, mesh, lowering="collective")
+        variants["mpi_sharded"] = omp.compile(
+            prog, mesh, lowering="collective", shard="slice")
         if p >= 2:
-            variants["mpi_mw"] = omp.to_mpi(prog, mesh,
-                                            lowering="master_worker")
+            variants["mpi_mw"] = omp.compile(prog, mesh,
+                                             lowering="master_worker")
 
     for vname, dist in variants.items():
         got = dist(env)
@@ -376,13 +384,14 @@ def check_case2(seed: int, mesh, family: str | None = None) -> str:
 
     variants = {}
     if is_region:
-        variants["region2_auto"] = omp.region_to_mpi(prog, mesh, comm="auto")
-        variants["region2_gather"] = omp.region_to_mpi(prog, mesh,
-                                                       comm="gather")
+        variants["region2_auto"] = omp.compile(prog, mesh, comm="auto")
+        variants["region2_gather"] = omp.compile(prog, mesh, comm="gather")
     else:
-        variants["mpi2"] = omp.to_mpi(prog, mesh)
-        variants["mpi2_sharded"] = omp.to_mpi(prog, mesh, shard_inputs=True)
-        variants["region2_auto"] = omp.region_to_mpi(prog, mesh)
+        variants["mpi2"] = omp.compile(prog, mesh, lowering="collective")
+        variants["mpi2_sharded"] = omp.compile(
+            prog, mesh, lowering="collective", shard="slice")
+        variants["region2_auto"] = omp.compile(
+            omp.ParallelRegion((prog,)), mesh)
 
     for vname, dist in variants.items():
         got = dist(env)

@@ -25,11 +25,14 @@ REQUIRED = [
 # Sections/markers each doc must keep (guards against silently dropping
 # the subsystem docs when files are rewritten).
 REQUIRED_SECTIONS = {
-    "README.md": ["## Communication planning",
-                  "## Nested loops & 2-D meshes"],
+    "README.md": ["## Compiling",
+                  "## Communication planning",
+                  "## Nested loops & 2-D meshes",
+                  "omp.compile"],
     "EXPERIMENTS.md": ["## Perf-D", "## Perf-E"],
     "docs/PAPER_MAP.md": ["core/comm.py", "`collapse(2)`", "LoopNest",
-                          "core/nest.py"],
+                          "core/nest.py", "core/api.py", "`omp.compile`",
+                          "plan_comm"],
 }
 
 # repo-relative path tokens inside backticks, e.g. `src/repro/core/plan.py`
