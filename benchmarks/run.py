@@ -179,8 +179,9 @@ def bench_polybench():
 def _bench_subprocess(script: str, prefix: str, row_name: str):
     """Run a multi-device benchmark script in a subprocess (it forces its
     own 8 virtual devices while this process already initialised jax on
-    the single real one) and relay its CSV rows.  ``row_name`` labels
-    the failure row when the script dies."""
+    the single real one) and relay its CSV rows.  ``prefix`` may be one
+    prefix or a tuple; ``row_name`` labels the failure row when the
+    script dies."""
     import os
     import subprocess
     import sys
@@ -213,8 +214,11 @@ def bench_region():
 
 def bench_stencil_halo():
     """Cost-modeled halo boundaries vs the all-gather rule
-    (EXPERIMENTS.md §Perf-D)."""
-    _bench_subprocess("stencil_halo.py", "stencil_halo_", "stencil_halo")
+    (EXPERIMENTS.md §Perf-D) plus the multi-field aggregated schedule
+    vs the inline per-buffer rings (§Perf-G)."""
+    _bench_subprocess("stencil_halo.py",
+                      ("stencil_halo_", "stencil_multifield_"),
+                      "stencil_halo")
 
 
 def bench_heat2d():
@@ -384,6 +388,18 @@ def main(argv=None) -> None:
         }
         if COMPILE_CACHE:   # only when the compile_cache section ran
             payload["compile_cache"] = COMPILE_CACHE
+        # The communication snapshot: every row that carries collective
+        # ops / wire-byte / launch counters, so the perf trajectory of
+        # the comm planner + scheduler is recorded run over run (the
+        # committed benchmarks/BENCH_comm.json is this section from
+        # `--sections stencil_halo,heat2d`; CI regenerates and uploads
+        # it as an artifact).
+        comm_rows = [r for r in RESULTS
+                     if any(k in r for k in (
+                         "collective_ops", "wire_bytes", "modeled_wire",
+                         "launches_scheduled", "op_ratio", "ratio"))]
+        if comm_rows:
+            payload["comm"] = comm_rows
         with open(args.json, "w", encoding="utf-8") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {len(RESULTS)} results to {args.json}", flush=True)

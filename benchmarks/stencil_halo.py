@@ -14,6 +14,14 @@ it), compare the optimized-HLO collective traffic of
 * ``staged_mw``     — per-loop master/worker staging, the paper's
   pattern.
 
+A second section measures the **communication scheduler** (ISSUE 5) on
+a multi-field variant of the same chain (3 arrays sharing every halo
+boundary): ``comm_schedule="aggregate"`` packs the per-boundary
+``ppermute`` payloads into one launch per ring direction, against the
+``"inline"`` per-buffer baseline — same wire bytes, ~3x fewer boundary
+collective launches (``multifield_*`` rows; the acceptance bar is
+``inline >= 2 x aggregate`` collective ops).
+
 The headline number is **boundary wire bytes**: the exit materialisation
 of the final slabs is identical in both fused variants (XLA gathers the
 region outputs at the jit boundary either way), so
@@ -77,6 +85,42 @@ def make_heat_chain(n=N, c=CHUNK):
     )
     env = {"a": jnp.sin(jnp.arange(n, dtype=jnp.float32) * 0.01),
            "b": jnp.zeros(n, jnp.float32)}
+    return reg, env
+
+
+def make_multifield_chain(n=N, c=CHUNK, fields=3, sweeps=5):
+    """Ping-pong Jacobi sweeps over ``fields`` arrays at once: every
+    boundary carries ``fields`` buffers across the same ring — the
+    aggregation target of the communication scheduler.
+
+    Mirror of ``tests/test_comm.py::_multifield_region`` (kept separate
+    because this script must force XLA_FLAGS at import, which the test
+    process cannot absorb — same convention as heat2d); keep the sweep
+    body in sync with the test's so Perf-G measures the pinned program.
+    """
+    from repro import omp
+
+    a_names = tuple(f"a{k}" for k in range(fields))
+    b_names = tuple(f"b{k}" for k in range(fields))
+
+    def sweep(srcs, dsts, name):
+        @omp.parallel_for(start=1, stop=n - 1, schedule=omp.static(c),
+                          name=name)
+        def body(i, env):
+            return {d: omp.at(i, 0.25 * (env[s][i - 1] + 2.0 * env[s][i]
+                                         + env[s][i + 1]))
+                    for s, d in zip(srcs, dsts)}
+        return body
+
+    stages = []
+    cur, nxt = a_names, b_names
+    for k in range(sweeps):
+        stages.append(sweep(cur, nxt, f"mf{k + 1}"))
+        cur, nxt = nxt, cur
+    reg = omp.region(*stages, name="multifield")
+    env = {k: jnp.sin((j + 1) * jnp.arange(n, dtype=jnp.float32) * 0.01)
+           for j, k in enumerate(a_names)}
+    env.update({k: jnp.zeros(n, jnp.float32) for k in b_names})
     return reg, env
 
 
@@ -144,13 +188,70 @@ def measure():
     return rows, ratio
 
 
+def measure_multifield():
+    """Communication scheduler on the multi-field chain: aggregated
+    packed payloads vs the inline per-buffer rings (ISSUE 5)."""
+    from repro import omp
+    from repro.compat import make_mesh
+    from repro.launch import hlo_analysis as ha
+
+    mesh = make_mesh((RANKS,), ("data",))
+    reg, env = make_multifield_chain()
+    ref = reg(env)
+    avals = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in env.items()}
+
+    rows, stats = [], {}
+    for vname, mode in (("aggregate", "aggregate"), ("inline", "inline")):
+        prog = omp.compile(reg, mesh, env_like=env, comm_schedule=mode)
+        jitted = jax.jit(lambda e, prog=prog: prog(e))
+        got = jitted(env)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=1e-4, atol=1e-4)
+        co = jitted.lower(avals).compile()
+        rep = ha.analyze_hlo(co.as_text(), num_devices=RANKS)
+        n_ops = sum(c.multiplier for c in rep.collectives)
+        n_pp = sum(c.multiplier for c in rep.collectives
+                   if c.kind == "collective-permute")
+        us = _timeit(jitted, env)
+        sched = prog.comm_schedule
+        stats[vname] = (n_ops, n_pp, int(rep.total_wire_bytes))
+        rows.append((f"stencil_multifield_{vname}", us,
+                     f"collective_ops={n_ops}"
+                     f";ppermute_ops={n_pp}"
+                     f";wire_bytes={int(rep.total_wire_bytes)}"
+                     f";launches_inline={sched.launches_inline}"
+                     f";launches_scheduled={sched.launches_scheduled}"
+                     f";n_hoisted={sched.n_hoisted}"))
+
+    ops_i, pp_i, wire_i = stats["inline"]
+    ops_a, pp_a, wire_a = stats["aggregate"]
+    op_ratio = ops_i / max(1, ops_a)
+    rows.append(("stencil_multifield_schedule", 0.0,
+                 f"op_ratio={op_ratio:.2f}"
+                 f";ppermute_inline={pp_i};ppermute_aggregate={pp_a}"
+                 f";wire_inline={wire_i};wire_aggregate={wire_a}"))
+    return rows, op_ratio, wire_a, wire_i
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     rows, ratio = measure()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
+    mrows, op_ratio, wire_a, wire_i = measure_multifield()
+    for name, us, derived in mrows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
     assert ratio >= 5.0, (
         f"halo boundaries must move >=5x fewer wire bytes (got {ratio:.1f}x)")
+    assert op_ratio >= 2.0, (
+        f"aggregated schedule must emit >=2x fewer collective ops "
+        f"(got {op_ratio:.2f}x)")
+    assert wire_a <= 1.05 * wire_i, (
+        f"aggregation must not inflate wire bytes (+5% cap): "
+        f"{wire_a} vs {wire_i}")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ accepts **either** a :class:`~repro.core.pragma.ParallelFor` **or** a
 :class:`~repro.core.pragma.ParallelRegion` (rank-1 or rank-2) and runs
 the explicit pass pipeline
 
-    analyze  →  schedule  →  plan  →  plan_comm  →  lower
+    analyze  →  schedule  →  plan  →  plan_comm  →  schedule_comm  →  lower
 
 recording each stage's input/output artifact on ``compiled.passes`` so
 the intermediate representations are first-class (the lesson of the
@@ -26,6 +26,9 @@ pipeline IRs) instead of reachable only by poking private helpers.
   inter-loop residency planner :func:`repro.core.region.plan_region`),
 * **plan_comm** — cost-modeled boundary lowering
   (:class:`~repro.core.comm.BoundaryComm` per slab boundary),
+* **schedule_comm** — region-wide communication scheduling
+  (:class:`~repro.core.comm_schedule.CommSchedule`: aggregated
+  ``ppermute`` payloads, fused reductions, prefetched exchanges),
 * **lower**     — the executable artifact (the "generated MPI code"):
   a :class:`~repro.core.transform.DistributedProgram` or
   :class:`~repro.core.region.DistributedRegion` wrapped in
@@ -145,6 +148,14 @@ class Options:
     comm: CommMode = CommMode.AUTO
     shard: ShardPolicy = ShardPolicy.REPLICATE
 
+    comm_schedule: str = "aggregate"
+    """The **schedule_comm** pass mode (:mod:`repro.core.comm_schedule`):
+    ``"aggregate"`` (default) packs same-boundary ``ppermute`` payloads
+    into one launch per direction, fuses per-stage reduction combines
+    into flat collectives, and hoists each exchange to just after its
+    producer (prefetch); ``"inline"`` pins the per-buffer behavior —
+    same wire bytes, one launch per exchange — for measurement."""
+
     schedule: pragma.Schedule | None = None
     """Override every loop's ``schedule(...)`` clause at compile time
     (``None`` keeps the clauses written on the pragmas)."""
@@ -167,6 +178,16 @@ class Options:
             self, "comm", _coerce_enum(CommMode, self.comm, "comm"))
         object.__setattr__(
             self, "shard", _coerce_enum(ShardPolicy, self.shard, "shard"))
+
+        cs = self.comm_schedule
+        if isinstance(cs, str):
+            cs = cs.lower()
+        from repro.core.comm_schedule import SCHEDULE_MODES
+        if cs not in SCHEDULE_MODES:
+            raise CompileError(
+                f"Options.comm_schedule must be one of {SCHEDULE_MODES}, "
+                f"got {self.comm_schedule!r}")
+        object.__setattr__(self, "comm_schedule", cs)
 
         sched = self.schedule
         if isinstance(sched, str):
@@ -220,6 +241,7 @@ class Options:
         sched = (f"{self.schedule.kind}({self.schedule.chunk})"
                  if self.schedule is not None else "per-pragma")
         return (f"lowering={self.lowering.value} comm={self.comm.value} "
+                f"comm_schedule={self.comm_schedule} "
                 f"shard={self.shard.value} schedule={sched}")
 
 
@@ -227,7 +249,8 @@ class Options:
 # Pass records
 # ---------------------------------------------------------------------------
 
-PASS_NAMES = ("analyze", "schedule", "plan", "plan_comm", "lower")
+PASS_NAMES = ("analyze", "schedule", "plan", "plan_comm", "schedule_comm",
+              "lower")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -427,17 +450,24 @@ def _build_block(program, env_shapes, num, axis, options) -> _Artifacts:
         PassRecord("plan_comm",
                    input="single block: no inter-loop slab boundaries",
                    output=()),
+        PassRecord("schedule_comm",
+                   input="single block: no region-wide exchanges to "
+                         "schedule (per-block combines fuse at lower)",
+                   output=()),
     )
     return _Artifacts(passes=passes, exe_plan=plan, program=program)
 
 
 def _build_region_fused(region, env_shapes, num, axis,
                         options) -> _Artifacts:
+    from repro.core import comm_schedule as cs_mod
     from repro.core import region as region_mod
 
     rp = region_mod.plan_region(
         region, env_shapes, num, axis=axis, comm=options.comm.value,
         schedule=options.schedule)
+    rp.comm_sched = cs_mod.build_comm_schedule(
+        rp, mode=options.comm_schedule)
     loop_stages = [se for se in rp.stages if se.plan is not None]
     passes = (
         PassRecord("analyze",
@@ -456,6 +486,11 @@ def _build_region_fused(region, env_shapes, num, axis,
         PassRecord("plan_comm",
                    input="stage OUT layouts vs next-stage IN needs",
                    output=tuple(rp.comms)),
+        PassRecord("schedule_comm",
+                   input="planned boundary exchanges + stage order "
+                         "(aggregate payloads / fuse combines / hoist "
+                         "to producers)",
+                   output=rp.comm_sched),
     )
     return _Artifacts(passes=passes, exe_plan=rp, program=region)
 
@@ -526,6 +561,10 @@ def _build_region_staged(region, env_shapes, num, axis,
                    input="staged lowering: every boundary round-trips "
                          "through the replicated layout (paper Fig. 1b)",
                    output=()),
+        PassRecord("schedule_comm",
+                   input="staged lowering: no region-wide exchanges to "
+                         "schedule (per-block combines fuse at lower)",
+                   output=()),
     )
     return _Artifacts(
         passes=passes,
@@ -550,6 +589,7 @@ def _make_executor(program, mesh, axis, options: Options, exe_plan):
             unroll_chunks=options.unroll_chunks,
             paper_master_excluded=options.paper_master_excluded,
             comm=options.comm.value,
+            comm_schedule=options.comm_schedule,
             schedule_override=options.schedule,
             stage_plans=None if fused else exe_plan)
     return tf.DistributedProgram(
@@ -558,7 +598,8 @@ def _make_executor(program, mesh, axis, options: Options, exe_plan):
         shard_inputs=options.shard is ShardPolicy.SLICE,
         unroll_chunks=options.unroll_chunks,
         paper_master_excluded=options.paper_master_excluded,
-        schedule_override=options.schedule)
+        schedule_override=options.schedule,
+        comm_schedule=options.comm_schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -573,7 +614,9 @@ class Compiled:
     Callable (``compiled(env)`` / ``compiled.run(env)``) like the
     programs it replaces; additionally exposes the staged pipeline:
 
-    * ``.passes``       — the analyze→lower :class:`PassRecord` chain,
+    * ``.passes``       — the analyze→lower :class:`PassRecord` chain
+      (``analyze → schedule → plan → plan_comm → schedule_comm →
+      lower``),
     * ``.plan``         — the planning artifact (:class:`DistPlan`,
       :class:`~repro.core.region.RegionPlan`, or per-stage plans for
       staged regions),
@@ -645,7 +688,7 @@ class Compiled:
     @property
     def passes(self) -> tuple:
         """The recorded ``analyze → schedule → plan → plan_comm →
-        lower`` :class:`PassRecord` chain."""
+        schedule_comm → lower`` :class:`PassRecord` chain."""
         self._built()
         return self._passes
 
@@ -670,6 +713,14 @@ class Compiled:
         staged regions — nothing crosses a fused boundary there)."""
         return self._pass("plan_comm").output
 
+    @property
+    def comm_schedule(self):
+        """The **schedule_comm** artifact: a
+        :class:`~repro.core.comm_schedule.CommSchedule` for fused
+        regions (aggregation groups, fused combines, launch accounting);
+        ``()`` for single blocks and staged regions."""
+        return self._pass("schedule_comm").output
+
     # -- reporting ---------------------------------------------------------
 
     def report(self) -> str:
@@ -686,7 +737,7 @@ class Compiled:
         plan = self.plan
         base = {"lowering": self.options.lowering.value}
         if isinstance(plan, region_mod.RegionPlan):
-            return {
+            out = {
                 "kind": "region", **base,
                 "comm": plan.comm_mode,
                 "planned_wire_bytes": plan.planned_wire_bytes,
@@ -695,6 +746,13 @@ class Compiled:
                 "n_halo": plan.n_halo,
                 "n_reshards": plan.n_reshards,
             }
+            sched = plan.comm_sched
+            if sched is not None:
+                out["comm_schedule"] = sched.mode
+                out["launches_inline"] = sched.launches_inline
+                out["launches_scheduled"] = sched.launches_scheduled
+                out["n_hoisted"] = sched.n_hoisted
+            return out
         if isinstance(plan, plan_mod.DistPlan):
             _, total = report_mod._comm_breakdown(plan)
             return {"kind": "block", **base, "modeled_bytes": total}

@@ -177,6 +177,23 @@ REPLICATE = "replicate"
 
 COMM_MODES = ("auto", "gather")
 
+# Per-launch latency term of the aggregated cost model: every collective
+# *launch* pays a fixed overhead on top of its wire bytes (dispatch,
+# rendezvous, fusion barriers).  Expressed in wire-byte equivalents
+# (~1 us at a 50 GB/s link, the ICI constant hlo_analysis.py uses), so
+# launch counts and byte counts add in one unit.  The boundary planner
+# keeps choosing ops by pure wire bytes (`plan_boundary`); this term is
+# what lets the *scheduler* (repro.core.comm_schedule) justify packing k
+# same-boundary exchanges into one payload: the bytes are unchanged but
+# (k - 1) x alpha of launch overhead disappears.
+ALPHA_LAUNCH_BYTES = 4096
+
+
+def modeled_cost_bytes(wire_bytes: int, launches: int) -> int:
+    """Latency-aware cost of a communication plan in byte equivalents:
+    ``wire_bytes + ALPHA_LAUNCH_BYTES * launches``."""
+    return int(wire_bytes) + ALPHA_LAUNCH_BYTES * int(launches)
+
 
 @dataclasses.dataclass(frozen=True)
 class CommCost:
@@ -581,11 +598,33 @@ def halo_exchange(
     write never touched); remaining out-of-range rows are only consumed
     by masked padding lanes.
     """
-    p, c = num_devices, chunk
     win = _ring_extend(
-        stacks, axis=axis, num_devices=p, device_index=device_index,
-        chunk=c, delta_min=delta_min, delta_max=delta_max)
+        stacks, axis=axis, num_devices=num_devices,
+        device_index=device_index, chunk=chunk, delta_min=delta_min,
+        delta_max=delta_max)
+    return patch_window_prior(
+        win, num_devices=num_devices, device_index=device_index,
+        chunk=chunk, delta_min=delta_min, prior=prior, base=base,
+        cover=cover, dtype=dtype)
 
+
+def patch_window_prior(
+    win,
+    *,
+    num_devices: int,
+    device_index,
+    chunk: int,
+    delta_min: int,
+    prior=None,
+    base: int = 0,
+    cover: int | None = None,
+    dtype=None,
+):
+    """Patch window rows outside the slab's ``[0, cover)`` from the
+    replicated ``prior`` copy and cast to the consumer dtype — the
+    non-communicating half of :func:`halo_exchange`, shared with the
+    aggregated packing emitters (:mod:`repro.core.comm_schedule`)."""
+    p, c = num_devices, chunk
     if prior is not None:
         n_loc, width = win.shape[0], win.shape[1]
         rho = _window_positions(n_loc, width, p, c, device_index, delta_min)
@@ -646,7 +685,30 @@ def halo_exchange2(
         win, axis=axes[1], num_devices=p_j, device_index=d_j,
         chunk=c_j, delta_min=dmin_j, delta_max=dmax_j,
         stack_dim=2, lane_dim=3)
+    return patch_window_prior2(
+        win, num_devices=num_devices, device_indices=device_indices,
+        chunks=chunks, deltas=deltas, prior=prior, bases=bases,
+        covers=covers, dtype=dtype)
 
+
+def patch_window_prior2(
+    win,
+    *,
+    num_devices: tuple[int, int],
+    device_indices,
+    chunks: tuple[int, int],
+    deltas,
+    prior=None,
+    bases: tuple[int, int] = (0, 0),
+    covers: tuple[int, int] | None = None,
+    dtype=None,
+):
+    """Rank-2 :func:`patch_window_prior`: patch positions outside the
+    slab's cover rectangle from the replicated ``prior`` copy."""
+    (p_i, p_j) = num_devices
+    (c_i, c_j) = chunks
+    (d_i, d_j) = device_indices
+    (dmin_i, _), (dmin_j, _) = deltas
     if prior is not None:
         n_i, w_i, n_j, w_j = win.shape[:4]
         rho_i = _window_positions(n_i, w_i, p_i, c_i, d_i, dmin_i)

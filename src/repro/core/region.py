@@ -109,6 +109,10 @@ class RegionPlan:
     n_halo: int = 0                    # boundaries lowered to ppermute shifts
     comm_mode: str = "auto"
     rank: int = 1                      # nest rank shared by every loop
+    # the schedule_comm artifact (repro.core.comm_schedule.CommSchedule):
+    # aggregation groups + fused combines + launch accounting, attached
+    # after planning by the compile pipeline (or lazily by the executor)
+    comm_sched: Any = None
 
     @property
     def loop_plans(self) -> list[DistPlan]:
@@ -439,10 +443,13 @@ class DistributedRegion:
     unroll_chunks: bool = False
     paper_master_excluded: bool | None = None
     comm: str = "auto"                  # boundary planner mode
+    comm_schedule: str = "aggregate"    # schedule_comm mode
     schedule_override: pragma.Schedule | None = None
     stage_plans: tuple | None = None    # staged path: per-loop (name, plan)
 
     def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
+        from repro.core import comm_schedule as cs_mod
+
         env = {k: jnp.asarray(v) for k, v in env.items()}
         if self.lowering != "collective" or not self.fuse:
             return self._run_staged(env)
@@ -451,6 +458,9 @@ class DistributedRegion:
                 self.region, env, tf.mesh_axis_sizes(self.mesh, self.axis),
                 axis=self.axis, comm=self.comm,
                 schedule=self.schedule_override)
+        if self.plan.comm_sched is None:
+            self.plan.comm_sched = cs_mod.build_comm_schedule(
+                self.plan, mode=self.comm_schedule)
         return _execute_region(self, env)
 
     def _run_staged(self, env: dict) -> dict:
@@ -474,6 +484,7 @@ class DistributedRegion:
                 unroll_chunks=self.unroll_chunks,
                 paper_master_excluded=self.paper_master_excluded,
                 schedule_override=self.schedule_override,
+                comm_schedule=self.comm_schedule,
             )(out)
         return out
 
@@ -546,11 +557,15 @@ def region_to_mpi(
 
 
 def _execute_region(dr: DistributedRegion, env: dict) -> dict:
+    from repro.core import comm_schedule as cs_mod
+
     if dr.plan.rank == 2:
         return _execute_region2(dr, env)
     rp = dr.plan
     mesh, axis = dr.mesh, rp.axis
     env_dtypes = {k: v.dtype for k, v in env.items()}
+    sched = rp.comm_sched
+    aggregate = sched is not None and sched.mode == "aggregate"
 
     # exit layout is static — build specs up front
     slab_out = {k: lay for k, lay in rp.final_layout.items()
@@ -561,6 +576,24 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
     def device_fn(env_all):
         d = jax.lax.axis_index(axis)
         st: dict[str, tuple] = {k: ("repl", v) for k, v in env_all.items()}
+        # hoisted exchanges: (consumer stage idx, key) -> read window,
+        # issued right after the producing stage (the prefetch)
+        prefetched: dict[tuple[int, str], Any] = {}
+
+        def issue_prefetch(after_idx):
+            for grp in sched.groups_after(after_idx):
+                items = []
+                for ev in grp.events:
+                    _, stacks, sbase, scover, sprior, sdtype = st[ev.key]
+                    items.append(cs_mod.HaloItem(
+                        stacks=stacks, chunks=ev.chunks, shifts=ev.shifts,
+                        prior=sprior, bases=(sbase,), covers=(scover,),
+                        dtype=sdtype))
+                wins = cs_mod.aggregated_halo_exchange(
+                    items, axis=axis, num_devices=grp.events[0].num_devices[0],
+                    device_index=d)
+                for ev, win in zip(grp.events, wins):
+                    prefetched[(ev.consumer_idx, ev.key)] = win
 
         def materialize(key):
             tag = st[key][0]
@@ -577,7 +610,7 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
             st[key] = ("repl", full)
             return full
 
-        for se in rp.stages:
+        for si, se in enumerate(rp.stages):
             for k in se.gathers:
                 materialize(k)
 
@@ -612,17 +645,23 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
                     if feed == "resident":
                         slab_stacks[key] = st[key][1]
                     elif feed == "halo":
-                        # neighbor ppermute ring shifts: the planned
-                        # point-to-point boundary exchange (§3.1.4)
-                        _, stacks, sbase, scover, sprior, sdtype = st[key]
-                        h = dec.halo if dec.halo is not None else (0, 0)
-                        slab_stacks[key] = comm_mod.halo_exchange(
-                            stacks, axis=axis,
-                            num_devices=plan.chunks.num_devices,
-                            device_index=d, chunk=plan.chunks.chunk,
-                            delta_min=h[0] - sbase, delta_max=h[1] - sbase,
-                            prior=sprior, base=sbase, cover=scover,
-                            dtype=sdtype)
+                        if aggregate:
+                            # the scheduler issued this exchange right
+                            # after its producer (prefetched window)
+                            slab_stacks[key] = prefetched.pop((si, key))
+                        else:
+                            # neighbor ppermute ring shifts: the planned
+                            # point-to-point boundary exchange (§3.1.4)
+                            _, stacks, sbase, scover, sprior, sdtype = st[key]
+                            h = dec.halo if dec.halo is not None else (0, 0)
+                            slab_stacks[key] = comm_mod.halo_exchange(
+                                stacks, axis=axis,
+                                num_devices=plan.chunks.num_devices,
+                                device_index=d, chunk=plan.chunks.chunk,
+                                delta_min=h[0] - sbase,
+                                delta_max=h[1] - sbase,
+                                prior=sprior, base=sbase, cover=scover,
+                                dtype=sdtype)
                     else:
                         halo = dec.halo if dec.halo is not None else (0, 0)
                         slab_stacks[key] = nest_mod.local_slabs(
@@ -633,6 +672,10 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
             carry, ys = tf._run_local_chunks(
                 plan, se.stage, env_in, slab_stacks, d, dr.unroll_chunks)
 
+            # Cross-device combines of this stage's merges: issued
+            # per-key inline, or deferred into fused flat collectives
+            # (one launch per (collective, dtype) group) when scheduled.
+            pending: dict[tuple[str, str], tuple[str, Any]] = {}
             for key, dec in plan.vars.items():
                 info = plan.context.vars[key]
                 if dec.out_strategy == "identity":
@@ -648,6 +691,11 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
                     st[key] = ("slab", ys[key], b, t, prior, info.dtype)
                 elif dec.out_strategy == "scatter":
                     buf, mask = carry[key]
+                    if aggregate:
+                        pending[(key, "buf")] = ("psum", buf)
+                        pending[(key, "mask")] = \
+                            ("psum", mask.astype(jnp.int32))
+                        continue
                     summed = jax.lax.psum(buf, axis)
                     m = jax.lax.psum(mask.astype(jnp.int32), axis)
                     prior = st[key][1]
@@ -659,13 +707,44 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
                     owner = j_star % plan.chunks.num_devices
                     val = jnp.where(d == owner, carry[key],
                                     jnp.zeros_like(carry[key]))
+                    if aggregate:
+                        pending[(key, "put")] = ("psum", val)
+                        continue
                     st[key] = ("repl", jax.lax.psum(val, axis))
                 elif dec.out_strategy == "reduce":
                     rop = red_mod.get_reduction(dec.reduction_op)
+                    if aggregate and rop.collective in ("psum", "pmax",
+                                                        "pmin"):
+                        pending[(key, "red")] = (rop.collective, carry[key])
+                        continue
                     val = red_mod.cross_device_combine(rop, carry[key], axis)
                     if key in st:
                         val = rop.pairwise(st[key][1], val)
                     st[key] = ("repl", val)
+
+            if pending:
+                combined = cs_mod.fused_collectives(pending, axis)
+                for key, dec in plan.vars.items():
+                    if dec.out_strategy == "scatter":
+                        summed = combined[(key, "buf")]
+                        m = combined[(key, "mask")]
+                        prior = st[key][1]
+                        vmask = (m > 0).reshape(
+                            (-1,) + (1,) * (summed.ndim - 1))
+                        st[key] = ("repl", jnp.where(
+                            vmask, summed.astype(prior.dtype), prior))
+                    elif dec.out_strategy == "put":
+                        st[key] = ("repl", combined[(key, "put")])
+                    elif dec.out_strategy == "reduce" \
+                            and (key, "red") in combined:
+                        rop = red_mod.get_reduction(dec.reduction_op)
+                        val = combined[(key, "red")]
+                        if key in st:
+                            val = rop.pairwise(st[key][1], val)
+                        st[key] = ("repl", val)
+
+            if aggregate:
+                issue_prefetch(si)
 
         outs_repl = {k: st[k][1] for k in repl_out}
         outs_slab = {k: st[k][1][:, None] for k in slab_out}
@@ -705,10 +784,14 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
     """Fused execution of a rank-2 region: ONE shard_map over the 2-D
     mesh; slabs stay resident as ``(n_i, c_i, n_j, c_j, *rest)`` stacks,
     halo boundaries run as row+column ``ppermute`` rings."""
+    from repro.core import comm_schedule as cs_mod
+
     rp = dr.plan
     mesh = dr.mesh
     ax_i, ax_j = rp.axis
     env_dtypes = {k: v.dtype for k, v in env.items()}
+    sched = rp.comm_sched
+    aggregate = sched is not None and sched.mode == "aggregate"
 
     slab_out = {k: lay for k, lay in rp.final_layout.items()
                 if isinstance(lay, SlabLayout2)}
@@ -719,6 +802,23 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
         d_i = jax.lax.axis_index(ax_i)
         d_j = jax.lax.axis_index(ax_j)
         st: dict[str, tuple] = {k: ("repl", v) for k, v in env_all.items()}
+        prefetched: dict[tuple[int, str], Any] = {}
+
+        def issue_prefetch(after_idx):
+            for grp in sched.groups_after(after_idx):
+                items = []
+                for ev in grp.events:
+                    _, stacks, bases, covers, sprior, sdtype = st[ev.key]
+                    items.append(cs_mod.HaloItem(
+                        stacks=stacks, chunks=ev.chunks, shifts=ev.shifts,
+                        prior=sprior, bases=bases, covers=covers,
+                        dtype=sdtype))
+                wins = cs_mod.aggregated_halo_exchange2(
+                    items, axes=(ax_i, ax_j),
+                    num_devices=grp.events[0].num_devices,
+                    device_indices=(d_i, d_j))
+                for ev, win in zip(grp.events, wins):
+                    prefetched[(ev.consumer_idx, ev.key)] = win
 
         def materialize(key):
             tag = st[key][0]
@@ -739,7 +839,7 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
             st[key] = ("repl", full)
             return full
 
-        for se in rp.stages:
+        for si, se in enumerate(rp.stages):
             for k in se.gathers:
                 materialize(k)
 
@@ -775,6 +875,9 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
                     if feed == "resident":
                         slab_stacks[key] = st[key][1]
                     elif feed == "halo":
+                        if aggregate:
+                            slab_stacks[key] = prefetched.pop((si, key))
+                            continue
                         _, stacks, bases, covers, prior, dtype = st[key]
                         halos = dec.halo_axes
                         slab_stacks[key] = comm_mod.halo_exchange2(
@@ -804,6 +907,7 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
                 plan, se.stage, env_in, slab_stacks, (d_i, d_j),
                 dr.unroll_chunks)
 
+            reduce_items: dict[str, tuple] = {}
             for key, dec in plan.vars.items():
                 info = plan.context.vars[key]
                 if dec.out_strategy == "identity":
@@ -821,11 +925,26 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
                                info.dtype)
                 elif dec.out_strategy == "reduce":
                     rop = red_mod.get_reduction(dec.reduction_op)
+                    if aggregate:
+                        reduce_items[key] = (rop, carry[key])
+                        continue
                     val = red_mod.cross_device_combine(
                         rop, carry[key], (ax_i, ax_j))
                     if key in st:
                         val = rop.pairwise(st[key][1], val)
                     st[key] = ("repl", val)
+
+            if reduce_items:
+                combined = cs_mod.fused_cross_device_combine(
+                    reduce_items, (ax_i, ax_j))
+                for key, val in combined.items():
+                    rop = reduce_items[key][0]
+                    if key in st:
+                        val = rop.pairwise(st[key][1], val)
+                    st[key] = ("repl", val)
+
+            if aggregate:
+                issue_prefetch(si)
 
         outs_repl = {k: st[k][1] for k in repl_out}
         outs_slab = {k: st[k][1][:, None, :, :, None] for k in slab_out}

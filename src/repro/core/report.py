@@ -126,7 +126,8 @@ def render_compiled(compiled) -> str:
         f"mesh axis       : {compiled.axis!r} "
         f"({compiled.num_devices} compute ranks)",
         "",
-        "pass pipeline (analyze -> schedule -> plan -> plan_comm -> lower):",
+        "pass pipeline (analyze -> schedule -> plan -> plan_comm -> "
+        "schedule_comm -> lower):",
     ]
     for pr in compiled.passes:
         lines.append(f"  {pr.describe()}")
@@ -196,6 +197,21 @@ def render_region(rp) -> str:
             f"(all-gather-only baseline: ~{rp.gather_wire_bytes} B)")
     else:
         lines.append("  (no slab boundaries: nothing to exchange)")
+    sched = getattr(rp, "comm_sched", None)
+    if sched is not None:
+        what = ("aggregated ppermute payloads, fused reductions, "
+                "prefetched exchanges" if sched.mode == "aggregate"
+                else "per-buffer exchanges issued at the consumer "
+                     "(un-scheduled baseline)")
+        lines.append("")
+        lines.append(
+            f"communication schedule (schedule_comm, mode={sched.mode}): "
+            f"{what}:")
+        event_lines = sched.describe_lines()
+        if len(event_lines) == 1 and not sched.events:
+            lines.append("  (no exchanges to schedule)")
+        for ln in event_lines:
+            lines.append(f"  {ln}")
     lines.append("")
     lines.append(
         f"residency summary: {rp.n_elided} resident handoff(s) elided, "

@@ -165,6 +165,7 @@ class DistributedProgram:
     unroll_chunks: bool = False
     paper_master_excluded: bool | None = None
     schedule_override: pragma.Schedule | None = None
+    comm_schedule: str = "aggregate"    # fuse per-block combines when set
 
     def __call__(self, env: Mapping[str, Any]) -> dict:
         return _execute(self, {k: jnp.asarray(v) for k, v in env.items()})
@@ -388,8 +389,13 @@ def _run_local_chunks(plan, program, env_in, slab_stacks, worker_index,
         j = q * ch.num_devices + worker_index
         k0 = j * ch.chunk
         ks, valid, kc, ivec = _chunk_iteration_vectors(plan, j)
-        slabs_q = {k: jax.lax.dynamic_index_in_dim(v, q, 0, keepdims=False)
-                   for k, v in slab_stacks.items()}
+        if isinstance(q, int):
+            # static chunk index: plain slices instead of dynamic gathers
+            slabs_q = {k: v[q] for k, v in slab_stacks.items()}
+        else:
+            slabs_q = {k: jax.lax.dynamic_index_in_dim(v, q, 0,
+                                                       keepdims=False)
+                       for k, v in slab_stacks.items()}
         env_sub = _make_env_sub(plan, env_in, slabs_q, k0)
         updates = jax.vmap(lambda i: program.body(i, env_sub))(ivec)
         ys: dict[str, Any] = {}
@@ -397,7 +403,10 @@ def _run_local_chunks(plan, program, env_in, slab_stacks, worker_index,
         return carry, ys
 
     if ch.local_chunks == 1:
-        carry, ys = one_chunk(carry0, jnp.int32(0))
+        # Fast path: exactly one chunk per device — no lax.scan carry
+        # threading and no dynamic window gather; the slab body runs
+        # directly on the (statically sliced) single chunk.
+        carry, ys = one_chunk(carry0, 0)
         ys = {k: v[None] for k, v in ys.items()}
         return carry, ys
     qs = jnp.arange(ch.local_chunks, dtype=jnp.int32)
@@ -421,34 +430,63 @@ def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
         else:
             env_slab[k] = nest_mod.pad_reshape(env[k], plan.chunks)
 
+    aggregate = dp.comm_schedule == "aggregate"
+
     def device_fn(env_repl, env_slab):
+        from repro.core import comm_schedule as cs_mod
+
         d = jax.lax.axis_index(axis)
         slab_stacks = {k: v[:, 0] for k, v in env_slab.items()}
         carry, ys = _run_local_chunks(plan, program, env_repl, slab_stacks, d,
                                       dp.unroll_chunks)
 
+        # With the aggregate schedule, every psum-family combine of the
+        # block (scatter buf+mask pairs, put broadcasts, reduction
+        # partials) defers into ONE fused flat collective per
+        # (collective, dtype) group instead of one launch per merge.
         outs: dict[str, Any] = {}
+        pending: dict[tuple[str, str], tuple[str, Any]] = {}
         for key, dec in plan.vars.items():
             if dec.out_strategy in ("identity", "partial"):
                 outs[key] = ys[key][:, None]  # (n_loc, 1, c, *rest)
             elif dec.out_strategy == "scatter":
                 buf, mask = carry[key]
-                outs[key] = (
-                    jax.lax.psum(buf, axis),
-                    jax.lax.psum(mask.astype(jnp.int32), axis),
-                )
+                if aggregate:
+                    pending[(key, "buf")] = ("psum", buf)
+                    pending[(key, "mask")] = ("psum", mask.astype(jnp.int32))
+                else:
+                    outs[key] = (
+                        jax.lax.psum(buf, axis),
+                        jax.lax.psum(mask.astype(jnp.int32), axis),
+                    )
             elif dec.out_strategy == "put":
                 j_star = (t - 1) // plan.chunks.chunk
                 owner = j_star % plan.chunks.num_devices
                 val = jnp.where(d == owner, carry[key],
                                 jnp.zeros_like(carry[key]))
-                outs[key] = jax.lax.psum(val, axis)
+                if aggregate:
+                    pending[(key, "put")] = ("psum", val)
+                else:
+                    outs[key] = jax.lax.psum(val, axis)
             elif dec.out_strategy == "reduce":
                 rop = red_mod.get_reduction(dec.reduction_op)
                 if rop.collective == "gather":
                     outs[key] = carry[key][None]
+                elif aggregate:
+                    pending[(key, "red")] = (rop.collective, carry[key])
                 else:
                     outs[key] = red_mod.cross_device_combine(rop, carry[key], axis)
+        if pending:
+            combined = cs_mod.fused_collectives(pending, axis)
+            for key, dec in plan.vars.items():
+                if dec.out_strategy == "scatter":
+                    outs[key] = (combined[(key, "buf")],
+                                 combined[(key, "mask")])
+                elif dec.out_strategy == "put":
+                    outs[key] = combined[(key, "put")]
+                elif dec.out_strategy == "reduce" \
+                        and (key, "red") in combined:
+                    outs[key] = combined[(key, "red")]
         return outs
 
     in_specs = (
@@ -526,11 +564,19 @@ def _make_env_sub2(plan, env_in, slab_stacks, q_pair, k0s):
         info = plan.context.vars[key]
         if dec.in_strategy == "shard_halo":
             stacks = slab_stacks[key]
-            win = jax.lax.dynamic_index_in_dim(stacks, qi, 0, keepdims=False)
+            if isinstance(qi, int):      # one-chunk fast path: static slice
+                win = stacks[qi]
+            else:
+                win = jax.lax.dynamic_index_in_dim(stacks, qi, 0,
+                                                   keepdims=False)
             offs = [k0s[0] + dec.halo_axes[0][0]]
             if dec.shard_ndim == 2:
                 # stack dim for axis 1 is now position 1 (n_j)
-                win = jax.lax.dynamic_index_in_dim(win, qj, 1, keepdims=False)
+                if isinstance(qj, int):
+                    win = win[:, qj]
+                else:
+                    win = jax.lax.dynamic_index_in_dim(win, qj, 1,
+                                                       keepdims=False)
                 offs.append(k0s[1] + dec.halo_axes[1][0])
             env_sub[key] = ShiftedWindow(win, tuple(offs),
                                          info.shape, info.dtype)
@@ -584,7 +630,9 @@ def _run_local_chunks2(plan, program, env_in, slab_stacks, device_indices,
         return carry, ys
 
     if n_i * n_j == 1:
-        carry, ys = one_pair(dict(carry0), jnp.int32(0))
+        # Fast path: one (chunk_i, chunk_j) pair per device — no scan,
+        # static window slicing (see _run_local_chunks).
+        carry, ys = one_pair(dict(carry0), 0)
         ys = {k: v[None] for k, v in ys.items()}
     else:
         qs = jnp.arange(n_i * n_j, dtype=jnp.int32)
@@ -617,7 +665,11 @@ def _execute_collective2(dp: DistributedProgram, env: dict) -> dict:
             env_slab[k] = nest_mod.halo_slabs(env[k], ch_i, dec.halo_axes[0])
             slab_specs[k] = P(None, ax_i, None)
 
+    aggregate = dp.comm_schedule == "aggregate"
+
     def device_fn(env_repl, env_slab):
+        from repro.core import comm_schedule as cs_mod
+
         d_i = jax.lax.axis_index(ax_i)
         d_j = jax.lax.axis_index(ax_j)
         slab_stacks = {}
@@ -629,14 +681,21 @@ def _execute_collective2(dp: DistributedProgram, env: dict) -> dict:
         carry, ys = _run_local_chunks2(plan, program, env_repl, slab_stacks,
                                        (d_i, d_j), dp.unroll_chunks)
         outs: dict[str, Any] = {}
+        reduce_items: dict[str, tuple] = {}
         for key, dec in plan.vars.items():
             if dec.out_strategy in ("identity", "partial"):
                 # (n_i, c_i, n_j, c_j, *) -> (n_i, 1, c_i, n_j, 1, c_j, *)
                 outs[key] = ys[key][:, None, :, :, None]
             elif dec.out_strategy == "reduce":
                 rop = red_mod.get_reduction(dec.reduction_op)
-                outs[key] = red_mod.cross_device_combine(
-                    rop, carry[key], (ax_i, ax_j))
+                if aggregate:
+                    reduce_items[key] = (rop, carry[key])
+                else:
+                    outs[key] = red_mod.cross_device_combine(
+                        rop, carry[key], (ax_i, ax_j))
+        if reduce_items:
+            outs.update(cs_mod.fused_cross_device_combine(
+                reduce_items, (ax_i, ax_j)))
         return outs
 
     in_specs = ({k: P() for k in env_repl}, slab_specs)

@@ -37,13 +37,21 @@ from repro.core.context import (  # noqa: F401
     analyze_context,
 )
 from repro.core.comm import (  # noqa: F401
+    ALPHA_LAUNCH_BYTES,
     BoundaryComm,
     CommCost,
     halo_exchange,
     halo_exchange2,
+    modeled_cost_bytes,
     plan_boundary,
     plan_boundary2,
     plan_comm,
+)
+from repro.core.comm_schedule import (  # noqa: F401
+    CommEvent,
+    CommGroup,
+    CommSchedule,
+    build_comm_schedule,
 )
 from repro.core.loop import LoopInfo, LoopNotCanonical, analyze_loop  # noqa: F401
 from repro.core.nest import LoopNest, NestAffine, ShiftedWindow  # noqa: F401

@@ -343,7 +343,7 @@ def test_lazy_compile_builds_through_cache_on_first_call():
     out = c(env)
     np.testing.assert_allclose(np.asarray(out["y"]),
                                np.asarray(block(env)["y"]))
-    assert c.cache_hit is False and len(c.passes) == 5
+    assert c.cache_hit is False and len(c.passes) == 6
 
 
 # ---------------------------------------------------------------------------
@@ -355,7 +355,8 @@ def test_passes_artifact_integrity_block():
     block, env = _map_block()
     c = omp.compile(block, mesh1(), env_like=env)
     names = [p.name for p in c.passes]
-    assert names == ["analyze", "schedule", "plan", "plan_comm", "lower"]
+    assert names == ["analyze", "schedule", "plan", "plan_comm",
+                     "schedule_comm", "lower"]
     assert all(p.output is not None for p in c.passes)
 
     nest, ctx = c._pass("analyze").output
@@ -377,7 +378,8 @@ def test_passes_artifact_integrity_fused_region():
     reg, env = _chain_region()
     c = omp.compile(reg, mesh1(), env_like=env)
     names = [p.name for p in c.passes]
-    assert names == ["analyze", "schedule", "plan", "plan_comm", "lower"]
+    assert names == ["analyze", "schedule", "plan", "plan_comm",
+                     "schedule_comm", "lower"]
     rp = c.plan
     assert isinstance(rp, RegionPlan)
     analyzed = dict(c._pass("analyze").output)
@@ -391,7 +393,8 @@ def test_passes_artifact_integrity_staged_region():
     reg, env = _chain_region()
     c = omp.compile(reg, mesh1(), env_like=env, lowering="collective")
     names = [p.name for p in c.passes]
-    assert names == ["analyze", "schedule", "plan", "plan_comm", "lower"]
+    assert names == ["analyze", "schedule", "plan", "plan_comm",
+                     "schedule_comm", "lower"]
     plans = dict(c._pass("plan").output)
     assert set(plans) == {"c1", "c2"}
     assert all(isinstance(p, DistPlan) for p in plans.values())
@@ -406,7 +409,8 @@ def test_report_and_cost_summary_from_unified_artifact():
     c = omp.compile(block, mesh1(), env_like=env)
     text = c.report()
     assert "omp.compile" in text
-    assert "analyze -> schedule -> plan -> plan_comm -> lower" in text
+    assert ("analyze -> schedule -> plan -> plan_comm -> "
+            "schedule_comm -> lower") in text
     assert "OMP2MPI transformation report" in text
     cs = c.cost_summary()
     assert cs["kind"] == "block" and cs["modeled_bytes"] > 0
@@ -439,3 +443,42 @@ def test_compile_rank2_region_and_block():
     np.testing.assert_allclose(np.asarray(cr(env)["C"]),
                                np.asarray(ref["C"]))
     assert isinstance(cr.plan, RegionPlan) and cr.plan.rank == 2
+
+
+# ---------------------------------------------------------------------------
+# schedule_comm pass (ISSUE 5): Options.comm_schedule + the artifact
+# ---------------------------------------------------------------------------
+
+
+def test_options_comm_schedule_validation():
+    assert omp.Options().comm_schedule == "aggregate"
+    assert omp.Options(comm_schedule="INLINE").comm_schedule == "inline"
+    with pytest.raises(omp.CompileError, match="comm_schedule"):
+        omp.Options(comm_schedule="packed")
+    with pytest.raises(omp.CompileError, match="comm_schedule"):
+        omp.Options(comm_schedule=7)
+
+
+def test_schedule_comm_pass_artifact():
+    reg, env = _chain_region()
+    c = omp.compile(reg, mesh1(), env_like=env)
+    sched = c.comm_schedule
+    assert isinstance(sched, omp.CommSchedule)
+    assert sched.mode == "aggregate"
+    assert c._pass("schedule_comm").output is sched
+    assert c.plan.comm_sched is sched
+    # launch accounting lands in the cost summary
+    cs = c.cost_summary()
+    assert cs["comm_schedule"] == "aggregate"
+    assert cs["launches_scheduled"] <= cs["launches_inline"]
+    # inline mode records the same events with no grouping
+    ci = omp.compile(reg, mesh1(), env_like=env, comm_schedule="inline")
+    assert ci.comm_schedule.mode == "inline"
+    assert ci.comm_schedule.groups == ()
+    assert (ci.comm_schedule.launches_scheduled
+            == ci.comm_schedule.launches_inline)
+    # blocks and staged regions have nothing region-wide to schedule
+    block, benv = _map_block()
+    assert omp.compile(block, mesh1(), env_like=benv).comm_schedule == ()
+    cstag = omp.compile(reg, mesh1(), env_like=env, lowering="collective")
+    assert cstag.comm_schedule == ()

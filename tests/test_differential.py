@@ -11,11 +11,16 @@ lowering must reproduce the shared-memory reference
 (:func:`repro.core.transform.run_reference`).  Every variant routes
 through the one entry point ``omp.compile``:
 
-* ``Lowering.COLLECTIVE``, with ``shard`` = replicate and slice,
+* ``Lowering.COLLECTIVE``, with ``shard`` = replicate and slice, plus a
+  schedule-override draw that forces exactly one chunk per device (the
+  static fast path: no ``lax.scan``, no dynamic window gather),
 * ``Lowering.MASTER_WORKER`` (the paper's staging; needs >= 2 ranks),
 * ``Lowering.FUSED`` regions, both ``comm="auto"`` (cost-modeled halo
   ``ppermute`` boundaries) and ``comm="gather"`` (the PR 1 baseline),
-  plus the per-loop ``Lowering.COLLECTIVE`` staged fallback.
+  each under ``comm_schedule`` = ``aggregate`` (packed payloads, fused
+  reductions, prefetched exchanges) *and* ``inline`` — the two schedule
+  modes must be bit-identical — plus the per-loop
+  ``Lowering.COLLECTIVE`` staged fallback.
 
 Single-device examples run in-process through the (vendored) hypothesis
 ``given``; the 2/4-device sweep runs in one subprocess with forced
@@ -231,6 +236,8 @@ def check_case(seed: int, mesh, family: str | None = None) -> str:
     variants = {}
     if is_region:
         variants["region_auto"] = omp.compile(prog, mesh, comm="auto")
+        variants["region_inline"] = omp.compile(
+            prog, mesh, comm="auto", comm_schedule="inline")
         variants["region_gather"] = omp.compile(prog, mesh, comm="gather")
         variants["region_staged"] = omp.compile(prog, mesh,
                                                 lowering="collective")
@@ -241,12 +248,21 @@ def check_case(seed: int, mesh, family: str | None = None) -> str:
         variants["mpi"] = omp.compile(prog, mesh, lowering="collective")
         variants["mpi_sharded"] = omp.compile(
             prog, mesh, lowering="collective", shard="slice")
+        t = len(range(prog.start, prog.stop, prog.step))
+        if t > 0:
+            # pin the one-chunk-per-device fast path (static slab body,
+            # no scan): chunk = ceil(t / P) makes local_chunks == 1
+            variants["mpi_onechunk"] = omp.compile(
+                prog, mesh, lowering="collective", shard="slice",
+                schedule=omp.static(-(-t // p)))
         if p >= 2:
             variants["mpi_mw"] = omp.compile(prog, mesh,
                                              lowering="master_worker")
 
+    outs = {}
     for vname, dist in variants.items():
         got = dist(env)
+        outs[vname] = got
         assert set(got) == set(ref), (
             f"seed={seed} {family}/{vname} P={p}: key set "
             f"{sorted(got)} != {sorted(ref)}")
@@ -255,6 +271,17 @@ def check_case(seed: int, mesh, family: str | None = None) -> str:
                 np.asarray(got[k]), np.asarray(ref[k]),
                 rtol=1e-4, atol=1e-4,
                 err_msg=f"seed={seed} {family}/{vname} P={p} key={k!r}")
+    if "mpi_onechunk" in variants:
+        assert variants["mpi_onechunk"].plan.chunks.local_chunks == 1
+    if "region_inline" in outs:
+        # the two schedule modes move identical bytes and must produce
+        # bit-identical outputs
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.asarray(outs["region_auto"][k]),
+                np.asarray(outs["region_inline"][k]),
+                err_msg=f"seed={seed} {family} P={p} key={k!r}: "
+                        "aggregate vs inline schedule diverged")
     return family
 
 
@@ -385,6 +412,8 @@ def check_case2(seed: int, mesh, family: str | None = None) -> str:
     variants = {}
     if is_region:
         variants["region2_auto"] = omp.compile(prog, mesh, comm="auto")
+        variants["region2_inline"] = omp.compile(
+            prog, mesh, comm="auto", comm_schedule="inline")
         variants["region2_gather"] = omp.compile(prog, mesh, comm="gather")
     else:
         variants["mpi2"] = omp.compile(prog, mesh, lowering="collective")
@@ -393,8 +422,10 @@ def check_case2(seed: int, mesh, family: str | None = None) -> str:
         variants["region2_auto"] = omp.compile(
             omp.ParallelRegion((prog,)), mesh)
 
+    outs = {}
     for vname, dist in variants.items():
         got = dist(env)
+        outs[vname] = got
         assert set(got) == set(ref), (
             f"seed={seed} {family}/{vname} mesh={shape}: key set "
             f"{sorted(got)} != {sorted(ref)}")
@@ -403,6 +434,13 @@ def check_case2(seed: int, mesh, family: str | None = None) -> str:
                 np.asarray(got[k]), np.asarray(ref[k]),
                 rtol=1e-4, atol=1e-4,
                 err_msg=f"seed={seed} {family}/{vname} mesh={shape} key={k!r}")
+    if "region2_inline" in outs:
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.asarray(outs["region2_auto"][k]),
+                np.asarray(outs["region2_inline"][k]),
+                err_msg=f"seed={seed} {family} mesh={shape} key={k!r}: "
+                        "aggregate vs inline schedule diverged")
     return family
 
 

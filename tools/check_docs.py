@@ -27,12 +27,15 @@ REQUIRED = [
 REQUIRED_SECTIONS = {
     "README.md": ["## Compiling",
                   "## Communication planning",
+                  "## Communication scheduling",
                   "## Nested loops & 2-D meshes",
                   "omp.compile"],
-    "EXPERIMENTS.md": ["## Perf-D", "## Perf-E"],
+    "EXPERIMENTS.md": ["## Perf-D", "## Perf-E", "## Perf-G"],
     "docs/PAPER_MAP.md": ["core/comm.py", "`collapse(2)`", "LoopNest",
                           "core/nest.py", "core/api.py", "`omp.compile`",
-                          "plan_comm"],
+                          "plan_comm", "core/comm_schedule.py",
+                          "schedule_comm",
+                          "further optimized by software engineers"],
 }
 
 # repo-relative path tokens inside backticks, e.g. `src/repro/core/plan.py`
