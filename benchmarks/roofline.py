@@ -1,113 +1,131 @@
-"""Roofline table builder: reads dry-run JSON cells, emits §Roofline rows.
+"""Pallas-vs-lax roofline harness (EXPERIMENTS.md §Perf-H).
 
-Terms (per device, TPU v5e constants from the brief):
-  compute    = dot_flops / 197e12      (scan-corrected HLO MXU flops)
-  memory     = hlo_bytes / 819e9       (scan-corrected dot bytes — weight
-                                        + activation streaming; a lower
-                                        bound on HBM traffic)
-  collective = wire_bytes / 50e9       (HLO collectives x trip counts)
+Measures the two chunk-compute backends of the SAME compiled pipeline
+on the two stencil acceptance shapes:
 
-MODEL_FLOPS uses 6*N_active*tokens (train) / 2*N_active*tokens
-(prefill/decode); the ratio MODEL_FLOPS / HLO_FLOPs exposes remat and
-redundant-compute waste.
+* ``stencil``  — the 3-sweep 1-D ping-pong Jacobi chain of
+  benchmarks/stencil_halo.py (8 ranks on the ``data`` axis),
+* ``heat2d``   — the 3-sweep 2-D five-point chain of
+  benchmarks/heat2d.py (4x2 mesh, ``collapse(2)`` nests),
+
+each compiled twice: ``comm="auto"`` (the lax lowering — vmapped chunk
+bodies under ``lax.scan``) and ``lowering="pallas"`` (tiled shard-local
+kernels).  Outputs are checked ``allclose`` against the shared-memory
+reference before timing; rows carry the pallas tile geometry (spans,
+grid, tile/masked lanes) from the recorded ``KernelPlan`` so the
+committed snapshot shows WHAT was measured, plus the wall-clock ratio.
+
+HONESTY NOTE: this container has no TPU, so the pallas kernels run in
+**interpret mode** on 8 forced host devices.  Interpret wall-clock
+measures the lowering pipeline + merge overhead, NOT kernel quality —
+expect pallas slower than lax here; the committed
+``benchmarks/BENCH_pallas.json`` documents the backend's overhead
+floor and the geometry it would launch on real hardware (the paper's
+§5 "starting point that still can be further optimized").
+
+This script must see 8 virtual devices, so it forces XLA_FLAGS *before*
+importing jax — run it directly (``python benchmarks/roofline.py``) or
+through ``benchmarks/run.py --sections roofline``.
 """
 from __future__ import annotations
 
-import glob
-import json
 import os
+import sys
+import time
 
-from repro.configs import SHAPES, get_config
-from repro.launch.hlo_analysis import (
-    HBM_BW,
-    ICI_BW,
-    PEAK_FLOPS,
-    roofline_terms,
-)
+# make ``benchmarks.*`` importable when run directly (script mode puts
+# only benchmarks/ itself on sys.path)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
 
-def model_flops_per_device(rec: dict) -> float:
-    cfg = get_config(rec["arch"])
-    shape = SHAPES[rec["shape"]]
-    n_active = cfg.active_param_count()
-    dev = rec.get("devices", 256)
-    if shape.kind == "train":
-        tokens = shape.global_batch * shape.seq_len
-        return 6.0 * n_active * tokens / dev
-    if shape.kind == "prefill":
-        tokens = shape.global_batch * shape.seq_len
-        return 2.0 * n_active * tokens / dev
-    tokens = shape.global_batch          # decode: one token per sequence
-    return 2.0 * n_active * tokens / dev
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+jax.config.update("jax_platforms", "cpu")
+
+# moderate sizes: interpret mode pays a per-grid-step overhead, and the
+# whole section must fit the run.py subprocess budget
+STENCIL_N, STENCIL_CHUNK = 2048, 64
+HEAT2D_N, HEAT2D_M, HEAT2D_CHUNK = 128, 64, 8
 
 
-def load_cells(out_dir: str) -> list[dict]:
-    cells = []
-    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
-        with open(path) as f:
-            cells.append(json.load(f))
-    return cells
+def _timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
-def row_for(rec: dict) -> dict | None:
-    if rec.get("status") != "ok":
-        return None
-    hlo = rec["hlo"]
-    terms = roofline_terms(
-        hlo_flops=hlo["dot_flops"],
-        hlo_bytes=hlo["dot_bytes"],
-        wire_bytes=hlo["wire_bytes"],
-    )
-    mf = model_flops_per_device(rec)
-    return {
-        "cell": rec["cell"],
-        "arch": rec["arch"],
-        "shape": rec["shape"],
-        "mesh": rec["mesh"],
-        "compute_s": terms.compute_s,
-        "memory_s": terms.memory_s,
-        "collective_s": terms.collective_s,
-        "dominant": terms.dominant,
-        "roofline_fraction": terms.roofline_fraction,
-        "model_flops": mf,
-        "useful_ratio": mf / hlo["dot_flops"] if hlo["dot_flops"] else 0.0,
-        "hbm_gb": rec["memory"]["peak_per_device_gb"],
-        "hbm_adj_gb": rec["memory"].get("peak_tpu_adjusted_gb"),
-        "wire_gb": hlo["wire_bytes"] / 2**30,
-    }
+def _geometry(compiled) -> str:
+    """``k=v`` fields (no commas — run.py parses ``;``-joined pairs)
+    describing the KernelPlan actually lowered."""
+    kp = compiled.kernel_plan
+    spans = kp.spans
+    grid = "x".join(str(g) for g in spans[0].grid) if spans else "-"
+    tile = ("x".join(str(t.tile) for t in spans[0].tiles)
+            if spans else "-")
+    masked = ("x".join(str(t.masked_lanes) for t in spans[0].tiles)
+              if spans else "-")
+    return (f"spans={kp.n_kernels};max_fused={kp.max_fused};"
+            f"grid={grid};tile={tile};masked={masked}")
 
 
-def render_markdown(rows: list[dict]) -> str:
-    hdr = ("| cell | compute_s | memory_s | collective_s | dominant | "
-           "roofline_frac | useful_ratio | HBM(adj) GB |\n"
-           "|---|---|---|---|---|---|---|---|")
-    out = [hdr]
-    for r in rows:
-        out.append(
-            f"| {r['cell']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
-            f"| {r['collective_s']:.3e} | {r['dominant']} "
-            f"| {r['roofline_fraction']:.3f} | {r['useful_ratio']:.2f} "
-            f"| {r['hbm_gb']:.1f} ({r['hbm_adj_gb']}) |")
-    return "\n".join(out)
+def _measure_pair(tag: str, reg, env, mesh) -> list[tuple[str, float, str]]:
+    from repro import omp
+
+    ref = reg(env)
+    lax_c = omp.compile(reg, mesh, env_like=env, comm="auto")
+    pal_c = omp.compile(reg, mesh, env_like=env, lowering="pallas")
+    rows = []
+    times = {}
+    for vname, prog in (("lax", lax_c), ("pallas", pal_c)):
+        jitted = jax.jit(lambda e, prog=prog: prog(e))
+        got = jitted(env)
+        for k in ref:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(ref[k]),
+                rtol=1e-4, atol=1e-4,
+                err_msg=f"{tag}/{vname} key={k!r}")
+        us = _timeit(jitted, env)
+        times[vname] = us
+        derived = (_geometry(pal_c) + ";interpret=1"
+                   if vname == "pallas" else "")
+        rows.append((f"roofline_{tag}_{vname}", us, derived))
+    ratio = times["pallas"] / times["lax"]
+    rows.append((f"roofline_{tag}_ratio", 0.0,
+                 f"ratio={ratio:.2f};note=interpret-mode overhead floor"))
+    return rows
 
 
-def main(out_dir: str = "results/dryrun") -> None:
-    rows = [r for r in (row_for(c) for c in load_cells(out_dir)) if r]
-    rows.sort(key=lambda r: r["roofline_fraction"])
-    print(render_markdown(rows))
-    print()
-    print("# hardware: %.0f TFLOP/s bf16, %.0f GB/s HBM, %.0f GB/s link"
-          % (PEAK_FLOPS / 1e12, HBM_BW / 1e9, ICI_BW / 1e9))
-    # the three hillclimb candidates
-    if rows:
-        worst = rows[0]
-        coll = max(rows, key=lambda r: r["collective_s"]
-                   / max(r["compute_s"], 1e-12))
-        print(f"# worst roofline fraction : {worst['cell']}")
-        print(f"# most collective-bound   : {coll['cell']}")
+def measure() -> list[tuple[str, float, str]]:
+    from benchmarks.heat2d import make_heat2d_chain
+    from benchmarks.stencil_halo import make_heat_chain
+    from repro.compat import make_mesh
+
+    rows = []
+    mesh1 = make_mesh((8,), ("data",))
+    reg, env = make_heat_chain(n=STENCIL_N, c=STENCIL_CHUNK)
+    rows += _measure_pair("stencil", reg, env, mesh1)
+
+    mesh2 = make_mesh((4, 2), ("i", "j"))
+    reg2, env2 = make_heat2d_chain(n=HEAT2D_N, m=HEAT2D_M, c=HEAT2D_CHUNK)
+    rows += _measure_pair("heat2d", reg2, env2, mesh2)
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in measure():
+        print(f"{name},{us:.1f},{derived}", flush=True)
 
 
 if __name__ == "__main__":
-    import sys
-
-    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    main()

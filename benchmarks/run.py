@@ -227,6 +227,13 @@ def bench_heat2d():
     _bench_subprocess("heat2d.py", "heat2d_", "heat2d")
 
 
+def bench_roofline():
+    """Pallas-vs-lax chunk compute on the stencil acceptance shapes
+    (EXPERIMENTS.md §Perf-H; interpret mode on CPU — the committed
+    benchmarks/BENCH_pallas.json is this section's --json payload)."""
+    _bench_subprocess("roofline.py", "roofline_", "roofline")
+
+
 # ---------------------------------------------------------------------------
 # Compilation cache (omp.compile cold vs warm)
 # ---------------------------------------------------------------------------
@@ -353,8 +360,8 @@ def main(argv=None) -> None:
     parser.add_argument(
         "--sections", default=None,
         help="comma-separated subset of sections to run "
-             "(polybench,region,stencil_halo,heat2d,compile_cache,"
-             "kernels,lm)")
+             "(polybench,region,stencil_halo,heat2d,roofline,"
+             "compile_cache,kernels,lm)")
     args = parser.parse_args(argv)
 
     sections = {
@@ -362,6 +369,7 @@ def main(argv=None) -> None:
         "region": bench_region,
         "stencil_halo": bench_stencil_halo,
         "heat2d": bench_heat2d,
+        "roofline": bench_roofline,
         "compile_cache": bench_compile_cache,
         "kernels": bench_kernels,
         "lm": bench_lm_steps,

@@ -91,6 +91,13 @@ class Lowering(enum.Enum):
     """Paper-faithful Fig. 1b staging: rank 0 owns the shared memory,
     all traffic moves through its links.  Rank-1 nests only."""
 
+    PALLAS = "pallas"
+    """The FUSED lowering with each compute span — a stage's chunk
+    loop, or a chain of stages between scheduled exchanges — emitted as
+    one tiled Pallas kernel over the local slab
+    (:mod:`repro.core.pallas_lower`).  Interpret-mode fallback off-TPU;
+    see ``Options.pallas_interpret``."""
+
 
 class CommMode(enum.Enum):
     """Boundary planner mode for fused regions."""
@@ -170,6 +177,12 @@ class Options:
     unroll_chunks: bool = False
     paper_master_excluded: bool | None = None
 
+    pallas_interpret: bool | None = None
+    """Pallas execution mode for ``Lowering.PALLAS``: ``None`` (default)
+    runs the kernels in interpret mode off-TPU (CPU/CI) and compiled on
+    TPU; ``True``/``False`` forces.  Rejected under any other
+    lowering."""
+
     def __post_init__(self) -> None:
         object.__setattr__(
             self, "lowering",
@@ -236,6 +249,32 @@ class Options:
                 "Options.paper_master_excluded must be True, False or None "
                 f"(= derive from the lowering), got "
                 f"{self.paper_master_excluded!r}")
+
+        if self.pallas_interpret not in (None, True, False):
+            raise CompileError(
+                "Options.pallas_interpret must be True, False or None "
+                f"(= interpret off-TPU), got {self.pallas_interpret!r}")
+        if self.lowering is Lowering.PALLAS:
+            if self.unroll_chunks:
+                raise CompileError(
+                    "Options.unroll_chunks has no effect under "
+                    "Lowering.PALLAS: chunk compute runs as a tiled "
+                    "Pallas kernel grid, not a lax.scan that could be "
+                    "unrolled.  Drop unroll_chunks or use "
+                    "Lowering.FUSED/COLLECTIVE.")
+            if self.paper_master_excluded is not None:
+                raise CompileError(
+                    "Options.paper_master_excluded is a master/worker "
+                    "staging knob; Lowering.PALLAS never stages through "
+                    "a master rank (and Lowering.MASTER_WORKER has no "
+                    "pallas variant).  Drop paper_master_excluded or "
+                    "use Lowering.MASTER_WORKER.")
+        elif self.pallas_interpret is not None:
+            raise CompileError(
+                "Options.pallas_interpret only applies to "
+                "Lowering.PALLAS; this compile uses "
+                f"lowering={self.lowering.value!r}.  Drop "
+                "pallas_interpret or set lowering=\"pallas\".")
 
     def describe(self) -> str:
         sched = (f"{self.schedule.kind}({self.schedule.chunk})"
@@ -419,11 +458,23 @@ def _lowering_str(options: Options) -> str:
 def _build_artifacts(program, env_like, num, axis, options) -> _Artifacts:
     env_shapes = {k: _aval_of(v) for k, v in env_like.items()}
     if isinstance(program, pragma.ParallelRegion):
-        if options.lowering is Lowering.FUSED:
+        if options.lowering in (Lowering.FUSED, Lowering.PALLAS):
             return _build_region_fused(program, env_shapes, num, axis,
                                        options)
         return _build_region_staged(program, env_shapes, num, axis, options)
     return _build_block(program, env_shapes, num, axis, options)
+
+
+def _pallas_pass(options: Options, kernel_plan) -> tuple:
+    """The extra **pallas** PassRecord (only under Lowering.PALLAS, so
+    the default 6-pass chain stays pinned)."""
+    if options.lowering is not Lowering.PALLAS:
+        return ()
+    return (PassRecord(
+        "pallas",
+        input="exchange-free compute spans + chunk geometry "
+              "(tile derivation per axis)",
+        output=kernel_plan),)
 
 
 def _build_block(program, env_shapes, num, axis, options) -> _Artifacts:
@@ -455,6 +506,11 @@ def _build_block(program, env_shapes, num, axis, options) -> _Artifacts:
                          "schedule (per-block combines fuse at lower)",
                    output=()),
     )
+    if options.lowering is Lowering.PALLAS:
+        from repro.core import pallas_lower as plx
+
+        passes = passes + _pallas_pass(
+            options, plx.plan_block_kernel(plan, name=program.name))
     return _Artifacts(passes=passes, exe_plan=plan, program=program)
 
 
@@ -463,9 +519,24 @@ def _build_region_fused(region, env_shapes, num, axis,
     from repro.core import comm_schedule as cs_mod
     from repro.core import region as region_mod
 
-    rp = region_mod.plan_region(
-        region, env_shapes, num, axis=axis, comm=options.comm.value,
-        schedule=options.schedule)
+    try:
+        rp = region_mod.plan_region(
+            region, env_shapes, num, axis=axis, comm=options.comm.value,
+            schedule=options.schedule)
+    except LoopNotCanonical:
+        raise
+    except Exception as e:
+        if options.lowering is Lowering.PALLAS:
+            # almost always a host-side serial glue stage that cannot be
+            # shape-traced — the pallas lowering runs everything inside
+            # one shard_map and cannot leave the device for glue
+            raise CompileError(
+                f"Lowering.PALLAS cannot compile region {region.name!r}: "
+                f"a stage is not shape-traceable "
+                f"({type(e).__name__}: {e}).  Host-side serial glue "
+                "(numpy conversion, I/O) runs only under the staged "
+                "Lowering.COLLECTIVE path.") from e
+        raise
     rp.comm_sched = cs_mod.build_comm_schedule(
         rp, mode=options.comm_schedule)
     loop_stages = [se for se in rp.stages if se.plan is not None]
@@ -492,6 +563,11 @@ def _build_region_fused(region, env_shapes, num, axis,
                          "to producers)",
                    output=rp.comm_sched),
     )
+    if options.lowering is Lowering.PALLAS:
+        from repro.core import pallas_lower as plx
+
+        passes = passes + _pallas_pass(
+            options, plx.plan_region_kernels(rp))
     return _Artifacts(passes=passes, exe_plan=rp, program=region)
 
 
@@ -579,8 +655,9 @@ def _make_executor(program, mesh, axis, options: Options, exe_plan):
     from repro.core import region as region_mod
     from repro.core import transform as tf
 
+    use_pallas = options.lowering is Lowering.PALLAS
     if isinstance(program, pragma.ParallelRegion):
-        fused = options.lowering is Lowering.FUSED
+        fused = options.lowering in (Lowering.FUSED, Lowering.PALLAS)
         return region_mod.DistributedRegion(
             region=program, mesh=mesh,
             plan=exe_plan if fused else None,
@@ -591,7 +668,9 @@ def _make_executor(program, mesh, axis, options: Options, exe_plan):
             comm=options.comm.value,
             comm_schedule=options.comm_schedule,
             schedule_override=options.schedule,
-            stage_plans=None if fused else exe_plan)
+            stage_plans=None if fused else exe_plan,
+            use_pallas=use_pallas,
+            pallas_interpret=options.pallas_interpret)
     return tf.DistributedProgram(
         program=program, mesh=mesh, plan=exe_plan, axis=axis,
         lowering=_lowering_str(options),
@@ -599,7 +678,9 @@ def _make_executor(program, mesh, axis, options: Options, exe_plan):
         unroll_chunks=options.unroll_chunks,
         paper_master_excluded=options.paper_master_excluded,
         schedule_override=options.schedule,
-        comm_schedule=options.comm_schedule)
+        comm_schedule=options.comm_schedule,
+        use_pallas=use_pallas,
+        pallas_interpret=options.pallas_interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -720,6 +801,17 @@ class Compiled:
         regions (aggregation groups, fused combines, launch accounting);
         ``()`` for single blocks and staged regions."""
         return self._pass("schedule_comm").output
+
+    @property
+    def kernel_plan(self):
+        """The **pallas** artifact
+        (:class:`~repro.core.pallas_lower.KernelPlan`: tile geometry +
+        fusion spans) under ``Lowering.PALLAS``; ``None`` otherwise."""
+        self._built()
+        for pr in self._passes:
+            if pr.name == "pallas":
+                return pr.output
+        return None
 
     # -- reporting ---------------------------------------------------------
 

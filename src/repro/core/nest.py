@@ -257,6 +257,67 @@ def local_slabs2(x, chs, halos, device_indices):
 
 
 # ---------------------------------------------------------------------------
+# Tile derivation — Pallas lowering geometry (consumed by
+# repro.core.pallas_lower; lives here because the chunk-cyclic layout
+# above is the single owner of iteration-space geometry)
+# ---------------------------------------------------------------------------
+
+
+# Minimum second-to-minor tile extent per element width (the TPU packing
+# rule: 8 sublanes of 32-bit lanes, narrower dtypes pack 2x/4x deeper).
+_SUBLANE_BY_ITEMSIZE = {8: 8, 4: 8, 2: 16, 1: 32}
+
+# Lanes per kernel tile are capped so one tile's window + values stay
+# comfortably inside VMEM whatever the chunk size.
+MAX_TILE_LANES = 256
+
+
+def sublane_for(dtype) -> int:
+    """Minimum tile granularity (second-to-minor extent) for ``dtype``."""
+    return _SUBLANE_BY_ITEMSIZE.get(np.dtype(dtype).itemsize, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisTiles:
+    """Tiling of one axis's chunk lanes for the Pallas backend.
+
+    A chunk's ``chunk`` lanes are covered by ``n_tiles`` tiles of
+    ``tile`` lanes each; the last tile's ``masked_lanes`` trailing lanes
+    are padding (their iteration numbers clamp to the final in-bounds
+    iteration and the produced garbage is sliced off after the kernel,
+    exactly like the chunk-cyclic trip padding).
+    """
+
+    chunk: int
+    tile: int
+    n_tiles: int
+    padded: int
+
+    @property
+    def masked_lanes(self) -> int:
+        return self.padded - self.chunk
+
+    def cover(self) -> list[tuple[int, int]]:
+        """``(start_lane, valid_lanes)`` per tile — a partition of
+        ``[0, chunk)`` with no overlap and no gap."""
+        return [(ti * self.tile, min(self.tile, self.chunk - ti * self.tile))
+                for ti in range(self.n_tiles)]
+
+
+def derive_axis_tiles(chunk: int, dtype,
+                      max_tile: int = MAX_TILE_LANES) -> AxisTiles:
+    """Tile one axis's chunk: ``tile`` is the chunk rounded up to the
+    dtype's sublane multiple, capped at ``max_tile``; remainder lanes of
+    the last tile are masked."""
+    sub = sublane_for(dtype)
+    tile = min(max(int(chunk), 1), int(max_tile))
+    tile = -(-tile // sub) * sub
+    n_tiles = max(1, -(-int(chunk) // tile))
+    return AxisTiles(chunk=int(chunk), tile=tile, n_tiles=n_tiles,
+                     padded=n_tiles * tile)
+
+
+# ---------------------------------------------------------------------------
 # Env substitution: sliced-read service from the local slab
 # ---------------------------------------------------------------------------
 

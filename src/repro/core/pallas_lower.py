@@ -1,0 +1,590 @@
+"""Pallas lowering — tiled shard-local kernels for chunk compute.
+
+``Lowering.PALLAS`` keeps the whole distributed machinery of the
+collective/fused lowerings — chunk-cyclic staging, halo exchanges, the
+aggregated comm schedule, the jit-level reassembly — and swaps ONLY the
+per-device chunk compute: instead of a ``lax.scan`` of vmapped body
+chunks (:func:`repro.core.transform._run_local_chunks`), each compute
+span runs as one tiled :func:`pl.pallas_call` over this device's local
+slab.  A *span* is a single loop stage, or — inside a fused region —
+the maximal chain of consecutive loop stages between scheduled
+exchanges that the ``comm_schedule`` hoist already isolates: those
+stages share chunk geometry and only hand values to each other through
+resident slabs, so the chain fuses into one kernel with intermediate
+tiles forwarded in VMEM (never leaving the kernel).
+
+Geometry (per axis) comes from the chunk-cyclic layout owned by
+:mod:`repro.core.nest`: chunk ``j = q*P + d`` starts at ``k0 = j*c``;
+its ``c`` lanes tile as :class:`~repro.core.nest.AxisTiles` (sublane
+rounding per dtype, masked remainder lanes clamp to the last in-bounds
+iteration exactly like the trip padding).  Window inputs enter as
+full-chunk blocks ``(1, w, *rest)`` indexed ``(q, 0)`` — halo windows
+overlap between chunks, so halo-awareness lives in the in-kernel row
+offset ``pos - (k0 + b_min)`` rather than in the BlockSpec — and
+outputs leave as ``(1, tile, *rest)`` blocks indexed ``(q, ti)``.
+
+The kernel produces only dense per-lane body values; every merge
+(scatter/put/reduce folds, slab state updates, cross-device combines)
+runs outside on the sliced values via :func:`merge_chunk_values`,
+which reproduces the ``(carry, ys)`` contract of ``_run_local_chunks``
+bit-for-bit — that is what lets the differential test wall pin the
+backend against the lax lowering and the shared-memory reference.
+
+On CPU (this container, CI) the kernels run in interpret mode;
+``Options(pallas_interpret=...)`` forces either mode, ``None`` picks
+interpret off-TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nest as nest_mod
+from repro.core import reduction as red_mod
+from repro.core.nest import AxisTiles, ShiftedWindow, derive_axis_tiles
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# The KernelPlan artifact (recorded on Compiled.passes, rendered by
+# report.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpan:
+    """One fused Pallas kernel: a chain of same-geometry loop stages
+    with no exchange between them."""
+
+    stage_names: tuple[str, ...]
+    stage_indices: tuple[int, ...]
+    rank: int
+    grid: tuple[int, ...]
+    tiles: tuple[AxisTiles, ...]
+    forwarded: tuple[str, ...]      # keys forwarded tile-to-tile in VMEM
+    n_outputs: int
+
+    def describe(self) -> str:
+        geo = " x ".join(
+            f"{tl.n_tiles}*{tl.tile}" +
+            (f" ({tl.masked_lanes} masked)" if tl.masked_lanes else "")
+            for tl in self.tiles)
+        line = (f"{'+'.join(self.stage_names)}: grid={self.grid} "
+                f"tile={geo} chunk="
+                + "x".join(str(tl.chunk) for tl in self.tiles))
+        if self.forwarded:
+            line += f"  vmem-forwarded: {', '.join(self.forwarded)}"
+        return line
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Tile geometry + fusion spans of a PALLAS-lowered program."""
+
+    name: str
+    rank: int
+    spans: tuple[KernelSpan, ...]
+    n_loop_stages: int
+
+    @property
+    def n_kernels(self) -> int:
+        return len(self.spans)
+
+    @property
+    def max_fused(self) -> int:
+        return max((len(s.stage_names) for s in self.spans), default=0)
+
+    def describe_lines(self) -> list[str]:
+        lines = [f"pallas kernels: {self.n_kernels} span(s) over "
+                 f"{self.n_loop_stages} loop stage(s), interpret off-TPU"]
+        for s in self.spans:
+            lines.append("  " + s.describe())
+        return lines
+
+
+# ---------------------------------------------------------------------------
+# Span planning
+# ---------------------------------------------------------------------------
+
+
+def _stage_geom(plan) -> tuple:
+    return tuple((ch.chunk, ch.num_devices, ch.local_chunks,
+                  ch.padded_trip, ch.trip_count)
+                 for ch in plan.chunks_axes)
+
+
+def _written_keys(plan) -> set:
+    return {k for k, dec in plan.vars.items() if dec.out_strategy != "none"}
+
+
+def compute_region_spans(rp) -> list[list[int]]:
+    """Partition a region's executable loop stages into fusable spans.
+
+    A stage joins the running span iff it shares chunk geometry, needs
+    no gather/halo exchange, and every value it consumes is either
+    external to the span or hand-off-able in VMEM (a resident feed from
+    an in-span identity/partial producer).  Serial and zero-trip stages
+    break spans (they never reach the kernel).
+    """
+    spans: list[list[int]] = []
+    cur: list[int] | None = None
+    cur_geom = None
+    written: set = set()
+    for si, se in enumerate(rp.stages):
+        if se.kind != "loop" or se.plan is None \
+                or se.plan.nest.total_trip == 0:
+            cur = None
+            continue
+        plan = se.plan
+        geom = _stage_geom(plan)
+        ok = cur is not None and not se.gathers and geom == cur_geom
+        if ok:
+            for key in plan.context.env_keys:
+                dec = plan.vars[key]
+                if dec.in_strategy == "replicate":
+                    if key in written:      # produced by a pending merge
+                        ok = False
+                        break
+                elif dec.in_strategy in ("shard", "shard_halo"):
+                    feed = se.feeds.get(key, "slice")
+                    if feed == "halo":      # an exchange sits between
+                        ok = False
+                        break
+                    if key in written:
+                        if feed != "resident":
+                            ok = False
+                            break
+                        if plan.rank == 2 \
+                                and getattr(dec, "shard_ndim", 2) != 2:
+                            ok = False      # 1-D slab of a 2-D nest:
+                            break           # not lane-aligned in VMEM
+        if ok:
+            cur.append(si)
+        else:
+            cur = [si]
+            spans.append(cur)
+            cur_geom = geom
+            written = set()
+        written |= _written_keys(plan)
+    return spans
+
+
+def _span_dtype(plans) -> Any:
+    """Tile-granularity dtype for a span: its first output's value
+    dtype (geometry only — masked lanes, sublane rounding)."""
+    for plan in plans:
+        for key in sorted(plan.vars):
+            dec = plan.vars[key]
+            if dec.out_strategy != "none":
+                return plan.context.vars[key].write.value_dtype
+    return jnp.float32
+
+
+def _span_meta(plans, names, indices) -> KernelSpan:
+    plan0 = plans[0]
+    dt = _span_dtype(plans)
+    tiles = tuple(derive_axis_tiles(ch.chunk, dt)
+                  for ch in plan0.chunks_axes)
+    chs = plan0.chunks_axes
+    if plan0.rank == 1:
+        grid = (chs[0].local_chunks, tiles[0].n_tiles)
+    else:
+        grid = (chs[0].local_chunks, chs[1].local_chunks,
+                tiles[0].n_tiles, tiles[1].n_tiles)
+    # keys a later span stage consumes from an earlier one's tiles
+    written: set = set()
+    fwd: list[str] = []
+    for pi, plan in enumerate(plans):
+        if pi:
+            for key in plan.context.env_keys:
+                dec = plan.vars[key]
+                if dec.in_strategy in ("shard", "shard_halo") \
+                        and key in written and key not in fwd:
+                    fwd.append(key)
+        written |= _written_keys(plan)
+    n_out = sum(len(_written_keys(p)) for p in plans)
+    return KernelSpan(stage_names=tuple(names),
+                      stage_indices=tuple(indices),
+                      rank=plan0.rank, grid=grid, tiles=tiles,
+                      forwarded=tuple(fwd), n_outputs=n_out)
+
+
+def plan_block_kernel(plan, name: str | None = None) -> KernelPlan:
+    """KernelPlan of a single ParallelFor block (one span)."""
+    if plan.nest.total_trip == 0 or not _written_keys(plan):
+        return KernelPlan(name=name or plan.name, rank=plan.rank,
+                          spans=(), n_loop_stages=0)
+    span = _span_meta([plan], [name or plan.name], [0])
+    return KernelPlan(name=name or plan.name, rank=plan.rank,
+                      spans=(span,), n_loop_stages=1)
+
+
+def plan_region_kernels(rp) -> KernelPlan:
+    """KernelPlan of a fused region: one span per exchange-free chain."""
+    spans = []
+    for idxs in compute_region_spans(rp):
+        plans = [rp.stages[i].plan for i in idxs]
+        names = [rp.stages[i].name for i in idxs]
+        spans.append(_span_meta(plans, names, idxs))
+    return KernelPlan(name=rp.name, rank=rp.rank, spans=tuple(spans),
+                      n_loop_stages=sum(len(s.stage_indices)
+                                        for s in spans))
+
+
+# ---------------------------------------------------------------------------
+# Kernel execution
+# ---------------------------------------------------------------------------
+
+
+def resolve_interpret(option, mesh) -> bool:
+    """None -> interpret off-TPU (CPU/CI fallback); True/False forces."""
+    if option is not None:
+        return bool(option)
+    try:
+        platform = mesh.devices.flat[0].platform
+    except Exception:  # pragma: no cover - defensive
+        platform = jax.default_backend()
+    return platform != "tpu"
+
+
+@dataclasses.dataclass
+class SpanStage:
+    """One stage's kernel-side feeds, assembled by the executor."""
+
+    name: str
+    plan: Any
+    program: Any
+    ext_windows: dict          # key -> local slab stacks (kernel input)
+    env_repl: dict             # key -> replicated array (kernel input)
+    forwarded: frozenset       # keys served from in-span producer tiles
+
+
+def _halo_base(dec, axis: int = 0) -> int:
+    if dec.in_strategy != "shard_halo":
+        return 0
+    if getattr(dec, "halo_axes", None) is not None:
+        return dec.halo_axes[axis][0]
+    return dec.halo[0] if dec.halo is not None else 0
+
+
+def _collect_io(stages, rank: int, tiles):
+    """Input arrays/specs (after the SMEM meta scalar) and output
+    shapes/specs, in stable order."""
+    n_grid = 2 if rank == 1 else 4
+
+    def zero_map(ndim):
+        return lambda *_g: (0,) * ndim
+
+    def win_map(ndim):                       # (q, 0, ...) full-chunk block
+        if rank == 1:
+            return lambda q, ti: (q,) + (0,) * (ndim - 1)
+        return lambda qi, qj, ti, tj: (qi,) + (0,) * (ndim - 1)
+
+    def win2_map(ndim):                      # (qi, 0, qj, 0, ...)
+        return lambda qi, qj, ti, tj: (qi, 0, qj) + (0,) * (ndim - 3)
+
+    def out_map(nrest):
+        if rank == 1:
+            return lambda q, ti: (q, ti) + (0,) * nrest
+        return lambda qi, qj, ti, tj: (qi, ti, qj, tj) + (0,) * nrest
+
+    del n_grid
+    inputs, in_specs, loaders = [], [], []
+    for si, sp in enumerate(stages):
+        for key in sorted(sp.ext_windows):
+            arr = sp.ext_windows[key]
+            two_d = rank == 2 and getattr(sp.plan.vars[key],
+                                          "shard_ndim", 1) == 2
+            if two_d:
+                blk = (1, arr.shape[1], 1, arr.shape[3]) + arr.shape[4:]
+                in_specs.append(pl.BlockSpec(blk, win2_map(arr.ndim)))
+            else:
+                blk = (1,) + arr.shape[1:]
+                in_specs.append(pl.BlockSpec(blk, win_map(arr.ndim)))
+            inputs.append(arr)
+            loaders.append(("win2" if two_d else "win", si, key))
+        for key in sorted(sp.env_repl):
+            arr = jnp.asarray(sp.env_repl[key])
+            kind = "scalar" if arr.ndim == 0 else "repl"
+            if arr.ndim == 0:
+                arr = arr.reshape(1)
+            in_specs.append(pl.BlockSpec(arr.shape, zero_map(arr.ndim)))
+            inputs.append(arr)
+            loaders.append((kind, si, key))
+    out_shapes, out_specs, out_keys = [], [], []
+    for si, sp in enumerate(stages):
+        plan = sp.plan
+        chs = plan.chunks_axes
+        for key in sorted(plan.vars):
+            dec = plan.vars[key]
+            if dec.out_strategy == "none":
+                continue
+            info = plan.context.vars[key]
+            vshape = tuple(info.write.value_shape)
+            vdt = info.write.value_dtype
+            if rank == 1:
+                full = (chs[0].local_chunks, tiles[0].padded) + vshape
+                blk = (1, tiles[0].tile) + vshape
+            else:
+                full = (chs[0].local_chunks, tiles[0].padded,
+                        chs[1].local_chunks, tiles[1].padded) + vshape
+                blk = (1, tiles[0].tile, 1, tiles[1].tile) + vshape
+            out_shapes.append(jax.ShapeDtypeStruct(full, vdt))
+            out_specs.append(pl.BlockSpec(blk, out_map(len(vshape))))
+            out_keys.append((si, key))
+    return inputs, in_specs, loaders, out_shapes, out_specs, out_keys
+
+
+def execute_span(stages: list[SpanStage], device_indices: tuple,
+                 interpret: bool) -> list[tuple[dict, dict]]:
+    """Run a span's loop bodies as ONE tiled pallas_call; returns the
+    ``(carry, ys)`` pair of every stage (the ``_run_local_chunks``
+    contract), merges computed outside the kernel."""
+    plan0 = stages[0].plan
+    rank = plan0.rank
+    chs = plan0.chunks_axes
+    dt = _span_dtype([sp.plan for sp in stages])
+    tiles = tuple(derive_axis_tiles(ch.chunk, dt) for ch in chs)
+
+    (inputs, in_specs, loaders,
+     out_shapes, out_specs, out_keys) = _collect_io(stages, rank, tiles)
+    if not out_keys:
+        return [({}, {}) for _ in stages]
+
+    meta = jnp.stack([jnp.asarray(d, jnp.int32) for d in device_indices])
+    n_in = len(loaders)
+
+    def kernel(*refs):
+        meta_ref = refs[0]
+        in_refs = refs[1:1 + n_in]
+        out_refs = refs[1 + n_in:]
+        if rank == 1:
+            q, ti = pl.program_id(0), pl.program_id(1)
+            d = meta_ref[0]
+            k0 = (q * chs[0].num_devices + d) * chs[0].chunk
+            bases = (k0 + ti * tiles[0].tile,)
+            k0s = (k0,)
+            lane_ks = (bases[0]
+                       + jax.lax.iota(jnp.int32, tiles[0].tile),)
+        else:
+            qi, qj = pl.program_id(0), pl.program_id(1)
+            ti, tj = pl.program_id(2), pl.program_id(3)
+            d_i, d_j = meta_ref[0], meta_ref[1]
+            k0_i = (qi * chs[0].num_devices + d_i) * chs[0].chunk
+            k0_j = (qj * chs[1].num_devices + d_j) * chs[1].chunk
+            bases = (k0_i + ti * tiles[0].tile,
+                     k0_j + tj * tiles[1].tile)
+            k0s = (k0_i, k0_j)
+            lane_ks = (bases[0] + jax.lax.iota(jnp.int32, tiles[0].tile),
+                       bases[1] + jax.lax.iota(jnp.int32, tiles[1].tile))
+
+        loaded = {}
+        for (kind, si, key), ref in zip(loaders, in_refs):
+            val = ref[...]
+            if kind == "win":
+                loaded[(si, key)] = val[0]
+            elif kind == "win2":
+                loaded[(si, key)] = val[0, :, 0]
+            elif kind == "scalar":
+                loaded[(si, key)] = val[0]
+            else:
+                loaded[(si, key)] = val
+
+        span_vals: dict[str, Any] = {}
+        for si, sp in enumerate(stages):
+            plan, prog = sp.plan, sp.program
+            loops = plan.nest.axes
+            # masked remainder lanes clamp to the last in-bounds
+            # iteration, exactly like the chunk-cyclic trip padding
+            ivecs = []
+            for ax, (loop, ks) in enumerate(zip(loops, lane_ks)):
+                kc = jnp.minimum(ks, max(0, loop.trip_count - 1))
+                ivecs.append(loop.start + loop.step * kc)
+            env_sub: dict[str, Any] = {}
+            for key in plan.context.env_keys:
+                dec = plan.vars[key]
+                info = plan.context.vars[key]
+                if dec.in_strategy in ("shard", "shard_halo"):
+                    ndim_sh = (getattr(dec, "shard_ndim", 1)
+                               if rank == 2 else 1)
+                    if key in sp.forwarded:
+                        offs = tuple(bases[a] + _halo_base(dec, a)
+                                     for a in range(rank))
+                        env_sub[key] = ShiftedWindow(
+                            span_vals[key], offs, info.shape, info.dtype)
+                    else:
+                        offs = tuple(k0s[a] + _halo_base(dec, a)
+                                     for a in range(ndim_sh))
+                        env_sub[key] = ShiftedWindow(
+                            loaded[(si, key)], offs,
+                            info.shape, info.dtype)
+                elif dec.in_strategy == "replicate":
+                    env_sub[key] = loaded[(si, key)]
+                else:
+                    env_sub[key] = jnp.zeros(info.shape, info.dtype)
+            if rank == 1:
+                updates = jax.vmap(
+                    lambda i: prog.body(i, env_sub))(ivecs[0])
+            else:
+                updates = jax.vmap(lambda i: jax.vmap(
+                    lambda jv: prog.body(i, jv, env_sub))(ivecs[1])
+                )(ivecs[0])
+            for oi, (osi, key) in enumerate(out_keys):
+                if osi != si:
+                    continue
+                v = updates[key].value.astype(out_shapes[oi].dtype)
+                out_refs[oi][...] = (v[None] if rank == 1
+                                     else v[None, :, None])
+                if sp.plan.vars[key].out_strategy in ("identity",
+                                                      "partial"):
+                    span_vals[key] = v
+
+    if rank == 1:
+        grid = (chs[0].local_chunks, tiles[0].n_tiles)
+    else:
+        grid = (chs[0].local_chunks, chs[1].local_chunks,
+                tiles[0].n_tiles, tiles[1].n_tiles)
+    outs = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] + in_specs,
+        out_specs=out_specs, out_shape=out_shapes,
+        interpret=interpret,
+    )(meta, *inputs)
+    if not isinstance(outs, (list, tuple)):
+        outs = [outs]
+
+    results = []
+    for si, sp in enumerate(stages):
+        vals = {}
+        for oi, (osi, key) in enumerate(out_keys):
+            if osi != si:
+                continue
+            v = outs[oi]
+            if rank == 1:
+                vals[key] = v[:, :tiles[0].chunk]
+            else:
+                vals[key] = v[:, :tiles[0].chunk, :, :tiles[1].chunk]
+        if rank == 1:
+            results.append(merge_chunk_values(sp.plan, vals,
+                                              device_indices[0]))
+        else:
+            results.append(merge_chunk_values2(sp.plan, vals,
+                                               device_indices))
+    return results
+
+
+def run_local_chunks_pallas(plan, program, env_in, slab_stacks,
+                            device_index, *, interpret: bool):
+    """Drop-in for ``transform._run_local_chunks`` backed by one
+    pallas_call over this device's slab."""
+    sp = SpanStage(name=plan.name, plan=plan, program=program,
+                   ext_windows=slab_stacks, env_repl=env_in,
+                   forwarded=frozenset())
+    (carry, ys), = execute_span([sp], (device_index,), interpret)
+    return carry, ys
+
+
+def run_local_chunks_pallas2(plan, program, env_in, slab_stacks,
+                             device_indices, *, interpret: bool):
+    """Rank-2 drop-in for ``transform._run_local_chunks2``."""
+    sp = SpanStage(name=plan.name, plan=plan, program=program,
+                   ext_windows=slab_stacks, env_repl=env_in,
+                   forwarded=frozenset())
+    (carry, ys), = execute_span([sp], tuple(device_indices), interpret)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Merges — outside the kernel, reproducing the _run_local_chunks /
+# _run_local_chunks2 (carry, ys) contract from dense per-lane values
+# ---------------------------------------------------------------------------
+
+
+def merge_chunk_values(plan, values, device_index):
+    """(n_loc, c, *value_shape) dense values -> (carry, ys) exactly as
+    ``_run_local_chunks`` would have produced them."""
+    ch = plan.chunks
+    t = plan.loop.trip_count
+    js = (jnp.arange(ch.local_chunks, dtype=jnp.int32) * ch.num_devices
+          + device_index)
+    ks = (js[:, None] * ch.chunk
+          + jnp.arange(ch.chunk, dtype=jnp.int32)[None, :])
+    valid = ks < t
+    carry: dict[str, Any] = {}
+    ys: dict[str, Any] = {}
+    for key, dec in plan.vars.items():
+        if dec.out_strategy == "none":
+            continue
+        v = values[key]
+        info = plan.context.vars[key]
+        if dec.out_strategy in ("identity", "partial"):
+            ys[key] = v
+        elif dec.out_strategy == "scatter":
+            shape0 = info.shape[0]
+            pos = dec.write_map.a * ks + dec.write_map.b
+            pos = jnp.where(valid, pos, shape0).reshape(-1)
+            flat = v.reshape((-1,) + v.shape[2:])
+            buf = jnp.zeros(info.shape, info.dtype) \
+                .at[pos].set(flat, mode="drop")
+            mask = jnp.zeros((shape0,), jnp.bool_) \
+                .at[pos].set(True, mode="drop")
+            carry[key] = (buf, mask)
+        elif dec.out_strategy == "put":
+            j_star = (t - 1) // ch.chunk
+            lane = (t - 1) - j_star * ch.chunk
+            q_star = j_star // ch.num_devices
+            row = v[q_star, lane]
+            carry[key] = jnp.where(js[q_star] == j_star, row,
+                                   jnp.zeros(info.shape, info.dtype))
+        elif dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            ident = red_mod.identity_like(rop, v)
+            vmask = valid.reshape(valid.shape + (1,) * (v.ndim - 2))
+            flat = jnp.where(vmask, v, ident) \
+                .reshape((-1,) + v.shape[2:])
+            carry0 = red_mod.identity_like(
+                rop, jnp.zeros(info.write.value_shape,
+                               info.write.value_dtype))
+            carry[key] = rop.pairwise(carry0, rop.local_fold(flat, 0))
+    return carry, ys
+
+
+def merge_chunk_values2(plan, values, device_indices):
+    """(n_i, c_i, n_j, c_j, *value_shape) dense values -> (carry, ys)
+    exactly as ``_run_local_chunks2`` would have produced them."""
+    ch_i, ch_j = plan.chunks_axes
+    loop_i, loop_j = plan.nest.axes
+    d_i, d_j = device_indices
+    ks_i = ((jnp.arange(ch_i.local_chunks, dtype=jnp.int32)
+             * ch_i.num_devices + d_i)[:, None] * ch_i.chunk
+            + jnp.arange(ch_i.chunk, dtype=jnp.int32)[None, :])
+    ks_j = ((jnp.arange(ch_j.local_chunks, dtype=jnp.int32)
+             * ch_j.num_devices + d_j)[:, None] * ch_j.chunk
+            + jnp.arange(ch_j.chunk, dtype=jnp.int32)[None, :])
+    valid = (ks_i < loop_i.trip_count)[:, :, None, None] \
+        & (ks_j < loop_j.trip_count)[None, None, :, :]
+    carry: dict[str, Any] = {}
+    ys: dict[str, Any] = {}
+    for key, dec in plan.vars.items():
+        if dec.out_strategy == "none":
+            continue
+        v = values[key]
+        info = plan.context.vars[key]
+        if dec.out_strategy in ("identity", "partial"):
+            ys[key] = v
+        elif dec.out_strategy == "reduce":
+            rop = red_mod.get_reduction(dec.reduction_op)
+            ident = red_mod.identity_like(rop, v)
+            vmask = valid.reshape(valid.shape + (1,) * (v.ndim - 4))
+            flat = jnp.where(vmask, v, ident) \
+                .reshape((-1,) + v.shape[4:])
+            carry0 = red_mod.identity_like(
+                rop, jnp.zeros(info.write.value_shape,
+                               info.write.value_dtype))
+            carry[key] = rop.pairwise(carry0, rop.local_fold(flat, 0))
+    return carry, ys

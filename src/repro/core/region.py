@@ -446,6 +446,8 @@ class DistributedRegion:
     comm_schedule: str = "aggregate"    # schedule_comm mode
     schedule_override: pragma.Schedule | None = None
     stage_plans: tuple | None = None    # staged path: per-loop (name, plan)
+    use_pallas: bool = False            # Lowering.PALLAS: tiled kernels
+    pallas_interpret: bool | None = None
 
     def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
         from repro.core import comm_schedule as cs_mod
@@ -566,6 +568,11 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
     env_dtypes = {k: v.dtype for k, v in env.items()}
     sched = rp.comm_sched
     aggregate = sched is not None and sched.mode == "aggregate"
+    if dr.use_pallas:
+        from repro.core import pallas_lower as plx
+
+        pallas_interp = plx.resolve_interpret(dr.pallas_interpret, mesh)
+        span_of = {s[0]: s for s in plx.compute_region_spans(rp)}
 
     # exit layout is static — build specs up front
     slab_out = {k: lay for k, lay in rp.final_layout.items()
@@ -576,6 +583,46 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
     def device_fn(env_all):
         d = jax.lax.axis_index(axis)
         st: dict[str, tuple] = {k: ("repl", v) for k, v in env_all.items()}
+        span_results: dict[int, tuple] = {}
+
+        def run_span(si, env_in, slab_stacks):
+            """Fuse the span starting at stage ``si`` into one pallas
+            kernel; later stages' external feeds come from the current
+            ``st`` (spans never cross an exchange, so those entries are
+            stable until each stage's merge runs)."""
+            specs = []
+            written: set = set()
+            for sj in span_of[si]:
+                sse = rp.stages[sj]
+                sp_plan = sse.plan
+                if sj == si:
+                    ext, repl, fwd = dict(slab_stacks), dict(env_in), set()
+                else:
+                    ext, repl, fwd = {}, {}, set()
+                    for key in sp_plan.context.env_keys:
+                        dec = sp_plan.vars[key]
+                        if dec.in_strategy in ("shard", "shard_halo"):
+                            if sse.feeds[key] == "resident":
+                                if key in written:
+                                    fwd.add(key)    # in-VMEM hand-off
+                                else:
+                                    ext[key] = st[key][1]
+                            else:               # "slice"
+                                halo = (dec.halo if dec.halo is not None
+                                        else (0, 0))
+                                ext[key] = nest_mod.local_slabs(
+                                    st[key][1], sp_plan.chunks, halo, d)
+                        elif dec.in_strategy == "replicate":
+                            repl[key] = st[key][1]
+                specs.append(plx.SpanStage(
+                    name=sse.name, plan=sp_plan, program=sse.stage,
+                    ext_windows=ext, env_repl=repl,
+                    forwarded=frozenset(fwd)))
+                written |= plx._written_keys(sp_plan)
+            for sj, res in zip(span_of[si],
+                               plx.execute_span(specs, (d,),
+                                                pallas_interp)):
+                span_results[sj] = res
         # hoisted exchanges: (consumer stage idx, key) -> read window,
         # issued right after the producing stage (the prefetch)
         prefetched: dict[tuple[int, str], Any] = {}
@@ -669,8 +716,14 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
                 elif dec.in_strategy == "replicate":
                     env_in[key] = st[key][1]
 
-            carry, ys = tf._run_local_chunks(
-                plan, se.stage, env_in, slab_stacks, d, dr.unroll_chunks)
+            if not dr.use_pallas:
+                carry, ys = tf._run_local_chunks(
+                    plan, se.stage, env_in, slab_stacks, d,
+                    dr.unroll_chunks)
+            else:
+                if si not in span_results:
+                    run_span(si, env_in, slab_stacks)
+                carry, ys = span_results.pop(si)
 
             # Cross-device combines of this stage's merges: issued
             # per-key inline, or deferred into fused flat collectives
@@ -792,6 +845,11 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
     env_dtypes = {k: v.dtype for k, v in env.items()}
     sched = rp.comm_sched
     aggregate = sched is not None and sched.mode == "aggregate"
+    if dr.use_pallas:
+        from repro.core import pallas_lower as plx
+
+        pallas_interp = plx.resolve_interpret(dr.pallas_interpret, mesh)
+        span_of = {s[0]: s for s in plx.compute_region_spans(rp)}
 
     slab_out = {k: lay for k, lay in rp.final_layout.items()
                 if isinstance(lay, SlabLayout2)}
@@ -803,6 +861,50 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
         d_j = jax.lax.axis_index(ax_j)
         st: dict[str, tuple] = {k: ("repl", v) for k, v in env_all.items()}
         prefetched: dict[tuple[int, str], Any] = {}
+        span_results: dict[int, tuple] = {}
+
+        def run_span(si, env_in, slab_stacks):
+            specs = []
+            written: set = set()
+            for sj in span_of[si]:
+                sse = rp.stages[sj]
+                sp_plan = sse.plan
+                sch_i, sch_j = sp_plan.chunks_axes
+                if sj == si:
+                    ext, repl, fwd = dict(slab_stacks), dict(env_in), set()
+                else:
+                    ext, repl, fwd = {}, {}, set()
+                    for key in sp_plan.context.env_keys:
+                        dec = sp_plan.vars[key]
+                        if dec.in_strategy in ("shard", "shard_halo"):
+                            if sse.feeds[key] == "resident":
+                                if key in written:
+                                    fwd.add(key)    # in-VMEM hand-off
+                                else:
+                                    ext[key] = st[key][1]
+                            else:               # "slice"
+                                halos = (dec.halo_axes
+                                         if dec.halo_axes is not None
+                                         else ((0, 0), (0, 0)))
+                                x = st[key][1]
+                                if dec.shard_ndim == 2:
+                                    ext[key] = nest_mod.local_slabs2(
+                                        x, (sch_i, sch_j), halos,
+                                        (d_i, d_j))
+                                else:
+                                    ext[key] = nest_mod.local_slabs(
+                                        x, sch_i, halos[0], d_i)
+                        elif dec.in_strategy == "replicate":
+                            repl[key] = st[key][1]
+                specs.append(plx.SpanStage(
+                    name=sse.name, plan=sp_plan, program=sse.stage,
+                    ext_windows=ext, env_repl=repl,
+                    forwarded=frozenset(fwd)))
+                written |= plx._written_keys(sp_plan)
+            for sj, res in zip(span_of[si],
+                               plx.execute_span(specs, (d_i, d_j),
+                                                pallas_interp)):
+                span_results[sj] = res
 
         def issue_prefetch(after_idx):
             for grp in sched.groups_after(after_idx):
@@ -903,9 +1005,14 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
                 elif dec.in_strategy == "replicate":
                     env_in[key] = st[key][1]
 
-            carry, ys = tf._run_local_chunks2(
-                plan, se.stage, env_in, slab_stacks, (d_i, d_j),
-                dr.unroll_chunks)
+            if not dr.use_pallas:
+                carry, ys = tf._run_local_chunks2(
+                    plan, se.stage, env_in, slab_stacks, (d_i, d_j),
+                    dr.unroll_chunks)
+            else:
+                if si not in span_results:
+                    run_span(si, env_in, slab_stacks)
+                carry, ys = span_results.pop(si)
 
             reduce_items: dict[str, tuple] = {}
             for key, dec in plan.vars.items():

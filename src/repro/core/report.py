@@ -132,6 +132,10 @@ def render_compiled(compiled) -> str:
     for pr in compiled.passes:
         lines.append(f"  {pr.describe()}")
     lines.append("")
+    kp = getattr(compiled, "kernel_plan", None)
+    if kp is not None:
+        lines.extend(kp.describe_lines())
+        lines.append("")
     plan = compiled.plan
     if isinstance(plan, RegionPlan):
         lines.append(render_region(plan))

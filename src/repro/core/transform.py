@@ -166,6 +166,8 @@ class DistributedProgram:
     paper_master_excluded: bool | None = None
     schedule_override: pragma.Schedule | None = None
     comm_schedule: str = "aggregate"    # fuse per-block combines when set
+    use_pallas: bool = False            # Lowering.PALLAS: tiled kernels
+    pallas_interpret: bool | None = None
 
     def __call__(self, env: Mapping[str, Any]) -> dict:
         return _execute(self, {k: jnp.asarray(v) for k, v in env.items()})
@@ -431,14 +433,23 @@ def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
             env_slab[k] = nest_mod.pad_reshape(env[k], plan.chunks)
 
     aggregate = dp.comm_schedule == "aggregate"
+    if dp.use_pallas:
+        from repro.core import pallas_lower as plx
+
+        pallas_interp = plx.resolve_interpret(dp.pallas_interpret, mesh)
 
     def device_fn(env_repl, env_slab):
         from repro.core import comm_schedule as cs_mod
 
         d = jax.lax.axis_index(axis)
         slab_stacks = {k: v[:, 0] for k, v in env_slab.items()}
-        carry, ys = _run_local_chunks(plan, program, env_repl, slab_stacks, d,
-                                      dp.unroll_chunks)
+        if dp.use_pallas:
+            carry, ys = plx.run_local_chunks_pallas(
+                plan, program, env_repl, slab_stacks, d,
+                interpret=pallas_interp)
+        else:
+            carry, ys = _run_local_chunks(plan, program, env_repl,
+                                          slab_stacks, d, dp.unroll_chunks)
 
         # With the aggregate schedule, every psum-family combine of the
         # block (scatter buf+mask pairs, put broadcasts, reduction
@@ -666,6 +677,10 @@ def _execute_collective2(dp: DistributedProgram, env: dict) -> dict:
             slab_specs[k] = P(None, ax_i, None)
 
     aggregate = dp.comm_schedule == "aggregate"
+    if dp.use_pallas:
+        from repro.core import pallas_lower as plx
+
+        pallas_interp = plx.resolve_interpret(dp.pallas_interpret, mesh)
 
     def device_fn(env_repl, env_slab):
         from repro.core import comm_schedule as cs_mod
@@ -678,8 +693,14 @@ def _execute_collective2(dp: DistributedProgram, env: dict) -> dict:
                 slab_stacks[k] = v[:, 0][:, :, :, 0]   # (n_i, w_i, n_j, w_j, *)
             else:
                 slab_stacks[k] = v[:, 0]               # (n_i, w_i, *rest)
-        carry, ys = _run_local_chunks2(plan, program, env_repl, slab_stacks,
-                                       (d_i, d_j), dp.unroll_chunks)
+        if dp.use_pallas:
+            carry, ys = plx.run_local_chunks_pallas2(
+                plan, program, env_repl, slab_stacks, (d_i, d_j),
+                interpret=pallas_interp)
+        else:
+            carry, ys = _run_local_chunks2(plan, program, env_repl,
+                                           slab_stacks, (d_i, d_j),
+                                           dp.unroll_chunks)
         outs: dict[str, Any] = {}
         reduce_items: dict[str, tuple] = {}
         for key, dec in plan.vars.items():

@@ -77,6 +77,10 @@ from repro.core.pragma import (  # noqa: F401
     serial,
     static,
 )
+from repro.core.pallas_lower import (  # noqa: F401
+    KernelPlan,
+    KernelSpan,
+)
 from repro.core.region import (  # noqa: F401
     DistributedRegion,
     RegionPlan,

@@ -482,3 +482,79 @@ def test_schedule_comm_pass_artifact():
     assert omp.compile(block, mesh1(), env_like=benv).comm_schedule == ()
     cstag = omp.compile(reg, mesh1(), env_like=env, lowering="collective")
     assert cstag.comm_schedule == ()
+
+
+# ---------------------------------------------------------------------------
+# Lowering.PALLAS option surface (PR 6): combinations the tiled-kernel
+# backend cannot serve must fail loudly at Options construction, and
+# host-side serial glue must fail loudly at compile — never silently
+# fall back to a different lowering.
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_options_reject_unroll_chunks():
+    with pytest.raises(omp.CompileError, match="unroll_chunks"):
+        omp.Options(lowering="pallas", unroll_chunks=True)
+
+
+def test_pallas_options_reject_master_worker_knob():
+    # paper_master_excluded stages through a master rank; pallas never
+    # does, in either direction of the flag
+    with pytest.raises(omp.CompileError, match="paper_master_excluded"):
+        omp.Options(lowering="pallas", paper_master_excluded=True)
+    with pytest.raises(omp.CompileError, match="paper_master_excluded"):
+        omp.Options(lowering="pallas", paper_master_excluded=False)
+
+
+def test_pallas_interpret_requires_pallas_lowering():
+    with pytest.raises(omp.CompileError, match="pallas_interpret"):
+        omp.Options(lowering="master_worker", pallas_interpret=True)
+    with pytest.raises(omp.CompileError, match="pallas_interpret"):
+        omp.Options(pallas_interpret=False)     # default lowering
+    # valid combinations construct fine
+    o = omp.Options(lowering="pallas", pallas_interpret=True)
+    assert o.lowering is omp.Lowering.PALLAS and o.pallas_interpret is True
+    assert omp.Options(lowering="pallas").pallas_interpret is None
+
+
+def test_pallas_rejects_host_side_glue_loudly():
+    """The staged path defers host-glue planning to run time
+    (test_staged_region_host_side_glue_still_runs); pallas has no such
+    fallback — everything must trace, so the compile fails loudly."""
+    n = 8
+
+    @omp.parallel_for(stop=n, name="pg1")
+    def l1(i, env):
+        return {"tmp": omp.at(i, env["x"][i] * 2.0)}
+
+    def glue_fn(env):
+        total = float(np.asarray(env["tmp"]).sum())
+        return {"bias": jnp.full((1,), total, jnp.float32)}
+
+    glue = omp.serial(glue_fn, reads=("tmp",), name="hostglue")
+
+    @omp.parallel_for(stop=n, name="pg2")
+    def l2(i, env):
+        return {"y": omp.at(i, env["tmp"][i] + env["bias"][0])}
+
+    reg = omp.region(l1, glue, l2, name="hostglue_pallas")
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "tmp": jnp.zeros(n, jnp.float32),
+           "bias": jnp.zeros(1, jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    with pytest.raises(omp.CompileError,
+                       match="PALLAS cannot compile region"):
+        omp.compile(reg, mesh1(), env_like=env, lowering="pallas")
+
+
+def test_pallas_pass_pipeline_gains_one_pass():
+    """The 6-pass pipeline is pinned elsewhere; PALLAS appends exactly
+    one 'pallas' pass (after schedule_comm, before lower) whose output
+    is the KernelPlan artifact."""
+    block, env = _map_block()
+    c = omp.compile(block, mesh1(), env_like=env, lowering="pallas")
+    names = [p.name for p in c.passes]
+    assert names == ["analyze", "schedule", "plan", "plan_comm",
+                     "schedule_comm", "pallas", "lower"]
+    assert isinstance(c.kernel_plan, omp.KernelPlan)
+    assert c._pass("pallas").output is c.kernel_plan

@@ -29,13 +29,16 @@ REQUIRED_SECTIONS = {
                   "## Communication planning",
                   "## Communication scheduling",
                   "## Nested loops & 2-D meshes",
+                  "## Pallas kernels",
                   "omp.compile"],
-    "EXPERIMENTS.md": ["## Perf-D", "## Perf-E", "## Perf-G"],
+    "EXPERIMENTS.md": ["## Perf-D", "## Perf-E", "## Perf-G",
+                       "## Perf-H"],
     "docs/PAPER_MAP.md": ["core/comm.py", "`collapse(2)`", "LoopNest",
                           "core/nest.py", "core/api.py", "`omp.compile`",
                           "plan_comm", "core/comm_schedule.py",
                           "schedule_comm",
-                          "further optimized by software engineers"],
+                          "further optimized by software engineers",
+                          "core/pallas_lower.py", "`Lowering.pallas`"],
 }
 
 # repo-relative path tokens inside backticks, e.g. `src/repro/core/plan.py`
