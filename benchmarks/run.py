@@ -15,6 +15,11 @@ Sections:
 * compile_cache_*: cold vs warm ``omp.compile`` (the structural
   compilation cache); the ``--json`` payload carries the totals in its
   ``compile_cache`` section.
+* serving_*: the compile-and-serve service (EXPERIMENTS §Perf-I) —
+  cross-process warm start off the persistent AOT store (cold vs
+  restored) and concurrent client load over CompileService; the
+  committed benchmarks/BENCH_serving.json is this section's --json
+  payload.
 * kernels_*: Pallas interpret-mode kernels vs jnp oracles.
 * train_step_* / decode_step_*: smoke-size LM steps (end-to-end
   substrate sanity + µs tracking).
@@ -234,6 +239,13 @@ def bench_roofline():
     _bench_subprocess("roofline.py", "roofline_", "roofline")
 
 
+def bench_serving():
+    """Compile-and-serve: cross-process AOT warm start + concurrent
+    client load (EXPERIMENTS.md §Perf-I).  Subprocessed because the
+    cross-process phase spawns its own cold/warm children."""
+    _bench_subprocess("serving_load.py", "serving_", "serving_load")
+
+
 # ---------------------------------------------------------------------------
 # Compilation cache (omp.compile cold vs warm)
 # ---------------------------------------------------------------------------
@@ -361,7 +373,7 @@ def main(argv=None) -> None:
         "--sections", default=None,
         help="comma-separated subset of sections to run "
              "(polybench,region,stencil_halo,heat2d,roofline,"
-             "compile_cache,kernels,lm)")
+             "compile_cache,serving,kernels,lm)")
     args = parser.parse_args(argv)
 
     sections = {
@@ -371,6 +383,7 @@ def main(argv=None) -> None:
         "heat2d": bench_heat2d,
         "roofline": bench_roofline,
         "compile_cache": bench_compile_cache,
+        "serving": bench_serving,
         "kernels": bench_kernels,
         "lm": bench_lm_steps,
     }
@@ -408,6 +421,13 @@ def main(argv=None) -> None:
                          "launches_scheduled", "op_ratio", "ratio"))]
         if comm_rows:
             payload["comm"] = comm_rows
+        # The serving snapshot: cross-process warm start + concurrent
+        # load rows (the committed benchmarks/BENCH_serving.json is
+        # this section from `--sections serving`).
+        serving_rows = [r for r in RESULTS
+                        if r["name"].startswith("serving_")]
+        if serving_rows:
+            payload["serving"] = serving_rows
         with open(args.json, "w", encoding="utf-8") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {len(RESULTS)} results to {args.json}", flush=True)

@@ -1,0 +1,244 @@
+"""Persistent AOT executable store — the compile cache that survives
+the process.
+
+The structural compilation cache in :mod:`repro.core.api` makes warm
+compiles ~63x faster than cold (EXPERIMENTS §Perf-F), but it dies with
+the process: every fresh worker pays the full planning + XLA
+compilation cost again.  This module persists the *executable* — the
+end-to-end jitted ``Compiled.run`` lowered and XLA-compiled, then
+serialized via :mod:`jax.experimental.serialize_executable` — in a
+versioned on-disk store, so a fresh process restores the compiled
+binary instead of re-planning and re-compiling (EXPERIMENTS §Perf-I
+measures the cross-process warm start).
+
+Keys must be stable *across processes*, which the in-memory cache key
+is not (it pins loop bodies by ``id()``).  :func:`fingerprint` derives
+a structural content hash instead: function bodies hash by bytecode +
+consts + closure values (recursively — nested code objects hash by
+structure, never by ``repr`` which embeds addresses), programs by the
+same shape as the in-memory signature, arrays by shape/dtype/bytes.
+
+Robustness contract: a corrupt, truncated, version-skewed or otherwise
+unreadable entry is a *miss*, never a crash — the caller falls back to
+a cold compile and the store counts the error.  Writes are atomic
+(temp file + rename) so a concurrent reader never observes a partial
+entry.
+
+Entry layout (one file per key, ``<key>.aot``)::
+
+    MAGIC | u32 header_len | header JSON | sha256(body) | body
+
+where the header records the store version, the jax/jaxlib versions
+and the backend (any mismatch is a miss), and the body is the pickled
+``(payload, in_tree, out_tree)`` triple from
+``serialize_executable.serialize``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import json
+import os
+import pickle
+import struct
+import tempfile
+import types
+from typing import Any
+
+import jax
+import numpy as np
+
+STORE_VERSION = 1
+_MAGIC = b"RPROAOT\x01"
+
+#: Environment variable naming the store directory; when set, the
+#: compile pipeline (:mod:`repro.core.api`) enables persistence at
+#: import — this is how subprocess benchmarks and CI opt in.
+ENV_VAR = "REPRO_AOT_CACHE_DIR"
+
+
+# ---------------------------------------------------------------------------
+# Stable structural fingerprints
+# ---------------------------------------------------------------------------
+
+
+def _code_token(code: types.CodeType, seen: set) -> tuple:
+    """Structural identity of a code object.  ``repr`` of a code object
+    embeds its address — recurse into the fields that define behavior
+    instead."""
+    return ("code", code.co_name, code.co_argcount, code.co_nlocals,
+            code.co_code, _token(code.co_consts, seen),
+            code.co_names, code.co_varnames, code.co_freevars)
+
+
+def _function_token(fn, seen: set) -> tuple:
+    key = id(fn)
+    if key in seen:
+        return ("recursive-fn", fn.__qualname__)
+    seen = seen | {key}
+    closure = ()
+    if fn.__closure__:
+        closure = tuple(_token(c.cell_contents, seen)
+                        for c in fn.__closure__)
+    return ("fn", fn.__module__, fn.__qualname__,
+            _code_token(fn.__code__, seen),
+            _token(fn.__defaults__, seen), closure)
+
+
+def _token(v: Any, seen: set) -> Any:
+    """A repr-stable token for ``v``: equal program structure gives an
+    equal token in every process; addresses never leak in."""
+    if v is None or isinstance(v, (bool, int, float, complex, str, bytes)):
+        return v
+    if isinstance(v, enum.Enum):
+        return ("enum", type(v).__name__, v.value)
+    if isinstance(v, types.CodeType):
+        return _code_token(v, seen)
+    if isinstance(v, types.FunctionType):
+        return _function_token(v, seen)
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        arr = np.asarray(v)
+        return ("array", arr.shape, str(arr.dtype),
+                hashlib.sha256(arr.tobytes()).hexdigest())
+    if isinstance(v, (tuple, list)):
+        return (type(v).__name__,) + tuple(_token(x, seen) for x in v)
+    if isinstance(v, dict):
+        return ("dict",) + tuple(
+            (_token(k, seen), _token(v[k], seen))
+            for k in sorted(v, key=repr))
+    if isinstance(v, (set, frozenset)):
+        return ("set",) + tuple(sorted(repr(_token(x, seen)) for x in v))
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return ("dc", type(v).__name__) + tuple(
+            (f.name, _token(getattr(v, f.name), seen))
+            for f in dataclasses.fields(v))
+    # Fallback: type identity only.  A bare repr may embed an address
+    # (``<object at 0x...>``) which would defeat cross-process reuse.
+    r = repr(v)
+    return ("obj", type(v).__name__, r if " at 0x" not in r else "")
+
+
+def fingerprint(*parts: Any) -> str:
+    """SHA-256 hex digest of the stable token of ``parts``."""
+    tok = _token(tuple(parts), set())
+    return hashlib.sha256(repr(tok).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# The store
+# ---------------------------------------------------------------------------
+
+
+def empty_stats() -> dict:
+    return {"disk_hits": 0, "disk_misses": 0, "disk_errors": 0,
+            "disk_bytes_read": 0, "disk_bytes_written": 0}
+
+
+class AOTStore:
+    """One directory of serialized executables, one file per key.
+
+    ``load``/``save`` never raise on a bad entry or an unwritable
+    directory — persistence is an accelerator, not a correctness
+    dependency — every failure is counted in :attr:`stats`.
+    """
+
+    def __init__(self, path: str) -> None:
+        self.path = os.path.abspath(os.path.expanduser(path))
+        os.makedirs(self.path, exist_ok=True)
+        self.stats = empty_stats()
+
+    # -- key -> file -------------------------------------------------------
+
+    def _entry_path(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.aot")
+
+    def _header(self, key: str) -> dict:
+        return {"store_version": STORE_VERSION, "key": key,
+                "jax": jax.__version__,
+                "backend": jax.default_backend()}
+
+    def entries(self) -> list[str]:
+        try:
+            return sorted(f[:-4] for f in os.listdir(self.path)
+                          if f.endswith(".aot"))
+        except OSError:
+            return []
+
+    # -- save --------------------------------------------------------------
+
+    def save(self, key: str, compiled_exe) -> bool:
+        """Serialize a ``jax.stages.Compiled`` under ``key``.  Returns
+        whether the entry landed on disk."""
+        from jax.experimental import serialize_executable as se
+
+        try:
+            payload, in_tree, out_tree = se.serialize(compiled_exe)
+            body = pickle.dumps((payload, in_tree, out_tree),
+                                protocol=pickle.HIGHEST_PROTOCOL)
+            header = json.dumps(self._header(key)).encode()
+            blob = (_MAGIC + struct.pack("<I", len(header)) + header
+                    + hashlib.sha256(body).digest() + body)
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as fh:
+                    fh.write(blob)
+                os.replace(tmp, self._entry_path(key))
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        except Exception:
+            self.stats["disk_errors"] += 1
+            return False
+        self.stats["disk_bytes_written"] += len(blob)
+        return True
+
+    # -- load --------------------------------------------------------------
+
+    def load(self, key: str):
+        """The loaded executable for ``key``, or ``None`` on miss.
+        Corrupt/truncated/version-skewed entries count as misses (plus
+        ``disk_errors`` when the file existed but could not be used)
+        and the bad file is removed so it is not re-probed forever."""
+        from jax.experimental import serialize_executable as se
+
+        path = self._entry_path(key)
+        try:
+            with open(path, "rb") as fh:
+                blob = fh.read()
+        except OSError:
+            self.stats["disk_misses"] += 1
+            return None
+        try:
+            if blob[:len(_MAGIC)] != _MAGIC:
+                raise ValueError("bad magic")
+            off = len(_MAGIC)
+            (hlen,) = struct.unpack_from("<I", blob, off)
+            off += 4
+            header = json.loads(blob[off:off + hlen].decode())
+            off += hlen
+            want = self._header(key)
+            for field in ("store_version", "jax", "backend"):
+                if header.get(field) != want[field]:
+                    raise ValueError(
+                        f"version skew: {field}={header.get(field)!r} "
+                        f"(want {want[field]!r})")
+            digest, body = blob[off:off + 32], blob[off + 32:]
+            if hashlib.sha256(body).digest() != digest:
+                raise ValueError("checksum mismatch")
+            payload, in_tree, out_tree = pickle.loads(body)
+            exe = se.deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:
+            self.stats["disk_errors"] += 1
+            self.stats["disk_misses"] += 1
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
+        self.stats["disk_hits"] += 1
+        self.stats["disk_bytes_read"] += len(blob)
+        return exe

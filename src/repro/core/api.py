@@ -43,20 +43,32 @@ thin shims that translate their kwargs to :class:`Options` and emit a
 
 Compilation is cached: a structural key (program signature, mesh
 shape/axes, Options, env shapes) lets repeated compiles — benchmark
-sweeps, the differential harness — skip re-planning entirely.  Stats
-via :func:`compile_cache_stats`; ``benchmarks/run.py --json`` records
-the cold/warm split in its ``compile_cache`` section.
+sweeps, the differential harness — skip re-planning entirely.  The
+cache is thread-safe for the concurrent compile service
+(:mod:`repro.serving.compile_service`): warm hits stay lock-free, the
+miss path inserts and evicts under a lock.  With
+:func:`enable_persistent_cache` (or ``$REPRO_AOT_CACHE_DIR``) compiled
+executables additionally persist across processes through the
+versioned AOT store (:mod:`repro.core.aot_store`): cold builds export
+and save the XLA executable, fresh processes restore it instead of
+re-planning and re-compiling.  Stats via :func:`compile_cache_stats`
+(including disk hit/miss/bytes counters); ``benchmarks/run.py --json``
+records the cold/warm split in its ``compile_cache`` section.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import enum
+import itertools
+import os
+import threading
 from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import aot_store as aot_store_mod
 from repro.core import pragma
 from repro.core import plan as plan_mod
 from repro.core.context import _aval_of
@@ -326,22 +338,103 @@ class _Artifacts:
     program: Any
 
 
-_CACHE: "collections.OrderedDict[tuple, _Artifacts]" = \
-    collections.OrderedDict()
+class _Counter:
+    """Increment-only counter whose :meth:`inc` is a single C-level
+    ``next()`` call — atomic under the GIL — so warm cache hits can
+    count *exactly* without taking a lock (``_STATS[k] += 1`` is a
+    read-modify-write that loses increments under threads).
+    ``value`` peeks the iterator state without consuming it."""
+
+    __slots__ = ("_it",)
+
+    def __init__(self) -> None:
+        self._it = itertools.count()
+
+    def inc(self) -> None:
+        next(self._it)
+
+    @property
+    def value(self) -> int:
+        return self._it.__reduce__()[1][0]
+
+
+class _Entry:
+    """One cache line: the artifacts plus an LRU recency stamp.  Stamp
+    refreshes are plain attribute stores (atomic under the GIL), so the
+    hit path never locks; eviction — on the locked miss path — scans
+    for the oldest stamp.  A racing stamp refresh during an eviction
+    scan can at worst save a just-touched entry, never corrupt."""
+
+    __slots__ = ("art", "stamp")
+
+    def __init__(self, art: _Artifacts, stamp: int) -> None:
+        self.art = art
+        self.stamp = stamp
+
+
+_CACHE: dict[tuple, _Entry] = {}
 _CACHE_CAP = 512
-_STATS = {"hits": 0, "misses": 0}
+_CACHE_LOCK = threading.Lock()   # guards the miss path: insert + evict
+_TICK = itertools.count()        # LRU clock (atomic, see _Counter)
+_HITS = _Counter()
+_MISSES = _Counter()
+
+# Persistent AOT executable store (None = in-memory only).  Enabled via
+# enable_persistent_cache() or the REPRO_AOT_CACHE_DIR environment
+# variable; EXPERIMENTS §Perf-I measures the cross-process warm start.
+_PERSISTENT: aot_store_mod.AOTStore | None = None
+_EXE_CACHE: dict[str, Any] = {}   # disk key -> loaded AOT executable
+_UNEXPORTABLE: set[str] = set()   # disk keys whose executor cannot lower
 
 
 def compile_cache_stats() -> dict:
-    """Hit/miss counters and current size of the compilation cache."""
-    return {"hits": _STATS["hits"], "misses": _STATS["misses"],
-            "size": len(_CACHE)}
+    """Hit/miss counters and current size of the compilation cache,
+    plus the persistent-store counters (``disk_hits`` / ``disk_misses``
+    / ``disk_errors`` / ``disk_bytes_read`` / ``disk_bytes_written`` —
+    zeros while persistence is disabled)."""
+    stats = {"hits": _HITS.value, "misses": _MISSES.value,
+             "size": len(_CACHE),
+             "persistent_dir": _PERSISTENT.path if _PERSISTENT else None}
+    stats.update(_PERSISTENT.stats if _PERSISTENT
+                 else aot_store_mod.empty_stats())
+    return stats
 
 
 def clear_compile_cache() -> None:
-    """Drop every cached compilation and reset the counters."""
-    _CACHE.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
+    """Drop every cached compilation and reset the counters (the
+    persistent store keeps its on-disk entries; its counters reset)."""
+    global _HITS, _MISSES
+    with _CACHE_LOCK:
+        _CACHE.clear()
+        _EXE_CACHE.clear()
+        _UNEXPORTABLE.clear()
+        _HITS = _Counter()
+        _MISSES = _Counter()
+        if _PERSISTENT is not None:
+            _PERSISTENT.stats = aot_store_mod.empty_stats()
+
+
+def enable_persistent_cache(path: str | None = None) -> str:
+    """Turn on the on-disk AOT executable store at ``path`` (default:
+    ``$REPRO_AOT_CACHE_DIR`` or ``~/.cache/repro-aot``).  Returns the
+    resolved directory.  Compiles gain a disk probe on the miss path
+    and an AOT export+save on cold builds; a fresh process pointed at
+    the same directory restores executables instead of re-planning and
+    re-compiling (EXPERIMENTS §Perf-I)."""
+    global _PERSISTENT
+    if path is None:
+        path = os.environ.get(aot_store_mod.ENV_VAR) or os.path.join(
+            os.path.expanduser("~"), ".cache", "repro-aot")
+    _PERSISTENT = aot_store_mod.AOTStore(path)
+    return _PERSISTENT.path
+
+
+def disable_persistent_cache() -> None:
+    """Back to in-memory-only caching (on-disk entries are kept)."""
+    global _PERSISTENT
+    _PERSISTENT = None
+    _EXE_CACHE.clear()
+    _UNEXPORTABLE.clear()
 
 
 def _program_signature(p) -> tuple:
@@ -358,13 +451,41 @@ def _program_signature(p) -> tuple:
 
 
 def _env_signature(env: Mapping[str, Any]) -> tuple:
+    """Shape/dtype identity of the environment, derived host-side.
+
+    This runs on every cache probe, so it must not touch the device:
+    the historical ``jnp.asarray`` fallback device-put every non-array
+    env value (python scalars, lists) on the hot key path.  Python
+    values type through numpy + ``canonicalize_dtype`` instead, which
+    lands on the same dtype ``jnp.asarray`` would have (x64 off:
+    float → float32, int → int32) without materializing anything."""
     sig = []
     for k in sorted(env):
         v = env[k]
-        if not (hasattr(v, "shape") and hasattr(v, "dtype")):
-            v = jnp.asarray(v)
-        sig.append((k, tuple(v.shape), str(v.dtype)))
+        shape = getattr(v, "shape", None)
+        dtype = getattr(v, "dtype", None)
+        if shape is None or dtype is None:
+            arr = np.asarray(v)
+            shape = arr.shape
+            dtype = jax.dtypes.canonicalize_dtype(arr.dtype)
+        sig.append((k, tuple(shape), str(dtype)))
     return tuple(sig)
+
+
+def _stable_program_token(p) -> tuple:
+    """Cross-process analogue of :func:`_program_signature` for the
+    persistent store: loop bodies hash by bytecode + consts + closure
+    values (:func:`repro.core.aot_store.fingerprint`) instead of by
+    ``id()``, so the same source program keys identically in every
+    process."""
+    if isinstance(p, pragma.ParallelRegion):
+        return ("region",
+                tuple(_stable_program_token(s) for s in p.stages))
+    if isinstance(p, pragma.SerialStage):
+        return ("serial", aot_store_mod.fingerprint(p.fn), p.reads)
+    return ("for", aot_store_mod.fingerprint(p.body), p.bounds, p.collapse,
+            (p.schedule.kind, p.schedule.chunk),
+            tuple(sorted(p.reduction.items())))
 
 
 def _mesh_signature(mesh) -> tuple:
@@ -683,6 +804,28 @@ def _make_executor(program, mesh, axis, options: Options, exe_plan):
         pallas_interpret=options.pallas_interpret)
 
 
+def _export_and_save(dkey: str, exe, sig: tuple):
+    """AOT-lower the executor end-to-end (jit → lower → XLA compile)
+    and persist the serialized executable under ``dkey``.  Returns the
+    compiled executable — which also serves this process's calls — or
+    ``None`` when the program cannot be staged out (e.g. host-side
+    serial glue in a staged region): those fall back to the per-call
+    jit path, exactly as before persistence existed."""
+    avals = {k: jax.ShapeDtypeStruct(
+                 tuple(sh), jax.dtypes.canonicalize_dtype(np.dtype(dt)))
+             for k, sh, dt in sig}
+    try:
+        compiled = jax.jit(lambda env: dict(exe(env))).lower(avals).compile()
+    except Exception:
+        return None
+    _PERSISTENT.save(dkey, compiled)
+    return compiled
+
+
+if os.environ.get(aot_store_mod.ENV_VAR):
+    enable_persistent_cache()
+
+
 # ---------------------------------------------------------------------------
 # The Compiled artifact
 # ---------------------------------------------------------------------------
@@ -722,44 +865,125 @@ class Compiled:
     _exe: Any = dataclasses.field(default=None, repr=False)
     _passes: tuple | None = dataclasses.field(default=None, repr=False)
     _env_sig: tuple | None = dataclasses.field(default=None, repr=False)
+    # Persistent-store state: the AOT-compiled end-to-end executable
+    # (serves run() without re-tracing), and — after a disk restore
+    # that skipped planning — the env avals to rebuild the pass
+    # artifacts lazily on inspection.
+    _runner: Any = dataclasses.field(default=None, repr=False)
+    _restored_env: Any = dataclasses.field(default=None, repr=False)
 
     # -- execution ---------------------------------------------------------
 
     def run(self, env: Mapping[str, Any]) -> dict:
         self._ensure(env)
+        if self._runner is not None:
+            try:
+                return dict(self._runner(env))
+            except Exception:
+                # The persisted executable refused these inputs (aval /
+                # layout / backend skew).  The store must never turn
+                # into a crash: drop the runner and fall back to the
+                # planned executor.
+                self._runner = None
+        if self._exe is None:
+            self._ensure(env, allow_restore=False)
         return self._exe(env)
 
     __call__ = run
 
+    @property
+    def restored(self) -> bool:
+        """Whether this artifact was served from the persistent store
+        (planning skipped; pass artifacts rebuild lazily on access)."""
+        return self._restored_env is not None
+
     # -- pipeline ----------------------------------------------------------
 
-    def _ensure(self, env_like: Mapping[str, Any]) -> None:
+    def _ensure(self, env_like: Mapping[str, Any], *,
+                allow_restore: bool = True) -> None:
         sig = _env_signature(env_like)
-        if self._exe is not None and sig == self._env_sig:
-            return
+        if sig == self._env_sig:
+            if self._exe is not None:
+                return
+            if allow_restore and self._runner is not None:
+                return
         key = (_program_signature(self.program), _mesh_signature(self.mesh),
                self.options, sig)
-        art = _CACHE.get(key)
-        if art is not None:
-            _STATS["hits"] += 1
-            _CACHE.move_to_end(key)
+        entry = _CACHE.get(key)          # warm hits: lock-free
+        if entry is not None:
+            _HITS.inc()
+            entry.stamp = next(_TICK)
             self.cache_hit = True
-        else:
-            _STATS["misses"] += 1
-            self.cache_hit = False
-            art = _build_artifacts(self.program, env_like, self.num_devices,
-                                   self.axis, self.options)
-            _CACHE[key] = art
+            self._bind(entry.art, sig)
+            if _PERSISTENT is not None:
+                self._runner = _EXE_CACHE.get(self._disk_key(sig))
+            return
+        if (allow_restore and _PERSISTENT is not None
+                and self._try_restore(sig)):
+            return
+        _MISSES.inc()                    # miss path: build, then lock
+        self.cache_hit = False
+        art = _build_artifacts(self.program, env_like, self.num_devices,
+                               self.axis, self.options)
+        with _CACHE_LOCK:
+            _CACHE[key] = _Entry(art, next(_TICK))
             while len(_CACHE) > _CACHE_CAP:
-                _CACHE.popitem(last=False)
+                oldest = min(_CACHE, key=lambda k: _CACHE[k].stamp)
+                del _CACHE[oldest]
+        self._bind(art, sig)
+        if _PERSISTENT is not None:
+            dkey = self._disk_key(sig)
+            runner = _EXE_CACHE.get(dkey)
+            if runner is None and dkey not in _UNEXPORTABLE:
+                runner = _export_and_save(dkey, self._exe, sig)
+                if runner is None:
+                    _UNEXPORTABLE.add(dkey)
+                else:
+                    _EXE_CACHE[dkey] = runner
+            self._runner = runner
+
+    def _bind(self, art: _Artifacts, sig: tuple) -> None:
         exe = _make_executor(self.program, self.mesh, self.axis,
                              self.options, art.exe_plan)
         self._passes = art.passes + (PassRecord(
             "lower", input="planned artifacts + mesh", output=exe),)
         self._exe = exe
         self._env_sig = sig
+        self._runner = None
+
+    def _disk_key(self, sig: tuple) -> str:
+        return aot_store_mod.fingerprint(
+            "compiled-run", aot_store_mod.STORE_VERSION,
+            _stable_program_token(self.program),
+            _mesh_signature(self.mesh), self.options, self.axis, sig)
+
+    def _try_restore(self, sig: tuple) -> bool:
+        """Serve this compile from the persistent store: planning is
+        skipped entirely — the pass artifacts rebuild lazily
+        (deterministically) if inspected."""
+        dkey = self._disk_key(sig)
+        runner = _EXE_CACHE.get(dkey)
+        if runner is None:
+            if dkey in _UNEXPORTABLE:
+                return False
+            runner = _PERSISTENT.load(dkey)
+            if runner is None:
+                return False
+            _EXE_CACHE[dkey] = runner
+        self.cache_hit = True
+        self._runner = runner
+        self._exe = None
+        self._passes = None
+        self._env_sig = sig
+        self._restored_env = {k: jax.ShapeDtypeStruct(tuple(sh), np.dtype(dt))
+                              for k, sh, dt in sig}
+        return True
 
     def _built(self) -> None:
+        if self._passes is None and self._restored_env is not None:
+            runner = self._runner
+            self._ensure(self._restored_env, allow_restore=False)
+            self._runner = runner
         if self._passes is None:
             raise CompileError(
                 "the pass pipeline has not run yet: call the compiled "

@@ -27,7 +27,10 @@ from repro.core.api import (  # noqa: F401
     clear_compile_cache,
     compile,
     compile_cache_stats,
+    disable_persistent_cache,
+    enable_persistent_cache,
 )
+from repro.core.aot_store import AOTStore  # noqa: F401
 from repro.core.context import (  # noqa: F401
     Affine,
     ContextInfo,

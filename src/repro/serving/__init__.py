@@ -1,2 +1,7 @@
-"""Batched serving: slot-based continuous batching over prefill/decode."""
+"""Serving: slot-based continuous batching over prefill/decode, plus
+the concurrent compile-and-run service over ``omp.compile``."""
+from repro.serving.compile_service import (  # noqa: F401
+    CompileService,
+    ServiceStats,
+)
 from repro.serving.engine import Request, ServeEngine  # noqa: F401

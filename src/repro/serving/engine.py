@@ -47,6 +47,7 @@ class ServeEngine:
         self.slot_pos = np.zeros(n_slots, np.int64)
         self.slot_last = np.zeros(n_slots, np.int64)
         self.queue: list[Request] = []
+        self._finished: list[Request] = []
         self._rng = jax.random.PRNGKey(seed)
         self._decode = jax.jit(
             lambda p, c, t, q: model.decode_step(
@@ -61,10 +62,14 @@ class ServeEngine:
 
     def _admit(self) -> None:
         for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            self._prefill_into_slot(slot, req)
+            # A request may finish at prefill (max_new_tokens=1 or a
+            # prefill EOS) — keep admitting into this slot until one
+            # survives to decode, so no slot idles while work queues.
+            while self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into_slot(slot, req)
+                if self.slot_req[slot] is not None:
+                    break
 
     def _prefill_into_slot(self, slot: int, req: Request) -> None:
         """Run a single-sequence prefill and scatter its KV into ``slot``."""
@@ -81,9 +86,29 @@ class ServeEngine:
             self.caches, cache1)
         tok = int(jnp.argmax(logits[0]))
         req.output.append(tok)
+        # Same completion check as tick(): a request whose budget (or
+        # EOS) is already met at admission must not occupy a slot — it
+        # would burn a decode tick in a dead slot and overrun
+        # max_new_tokens by one.
+        if self._is_done(req, tok):
+            self._retire(req)
+            return
         self.slot_req[slot] = req
         self.slot_pos[slot] = len(req.prompt)
         self.slot_last[slot] = tok
+
+    def _is_done(self, req: Request, tok: int) -> bool:
+        return (len(req.output) >= req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id))
+
+    def _retire(self, req: Request) -> None:
+        req.done = True
+        self._finished.append(req)
+
+    def take_finished(self) -> list[Request]:
+        """Pop every request that completed since the last call."""
+        out, self._finished = self._finished, []
+        return out
 
     # ------------------------------------------------------------- tick --
     def tick(self) -> int:
@@ -109,16 +134,20 @@ class ServeEngine:
             req.output.append(tok)
             self.slot_pos[slot] += 1
             self.slot_last[slot] = tok
-            if (len(req.output) >= req.max_new_tokens
-                    or (self.eos_id is not None and tok == self.eos_id)):
-                req.done = True
+            if self._is_done(req, tok):
+                self._retire(req)
                 self.slot_req[slot] = None
         return len(live)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        """Tick until queue and slots are empty; returns the completed
+        requests in completion order (historically this dropped every
+        result — the ``done`` list was never appended)."""
         done: list[Request] = []
         for _ in range(max_ticks):
             if not self.queue and all(r is None for r in self.slot_req):
                 break
             self.tick()
+            done.extend(self.take_finished())
+        done.extend(self.take_finished())
         return done

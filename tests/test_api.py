@@ -558,3 +558,152 @@ def test_pallas_pass_pipeline_gains_one_pass():
                      "schedule_comm", "pallas", "lower"]
     assert isinstance(c.kernel_plan, omp.KernelPlan)
     assert c._pass("pallas").output is c.kernel_plan
+
+
+# ---------------------------------------------------------------------------
+# Cache eviction at _CACHE_CAP (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+
+def _distinct_block(tag, n=16):
+    """A structurally distinct program per ``tag`` (distinct consts)."""
+    scale = float(sum(ord(ch) for ch in str(tag)))
+
+    @omp.parallel_for(stop=n, name=f"evict{tag}")
+    def block(i, env):
+        return {"y": omp.at(i, env["x"][i] * scale + 1.0)}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    return block, env
+
+
+def test_cache_eviction_lru_order(monkeypatch):
+    """At _CACHE_CAP the *least recently used* entry leaves: a hit
+    refreshes recency, so the evictee is the untouched key."""
+    from repro.core import api
+
+    omp.clear_compile_cache()
+    monkeypatch.setattr(api, "_CACHE_CAP", 2)
+    mesh = mesh1()
+    a, env_a = _distinct_block("a")
+    b, env_b = _distinct_block("b")
+    c, env_c = _distinct_block("c")
+
+    omp.compile(a, mesh, env_like=env_a)           # miss
+    omp.compile(b, mesh, env_like=env_b)           # miss
+    assert omp.compile(a, mesh, env_like=env_a).cache_hit  # refresh a
+    omp.compile(c, mesh, env_like=env_c)           # miss -> evicts b (LRU)
+
+    stats = omp.compile_cache_stats()
+    assert stats["size"] == 2
+    assert stats["hits"] == 1 and stats["misses"] == 3
+    assert omp.compile(a, mesh, env_like=env_a).cache_hit is True
+    assert omp.compile(c, mesh, env_like=env_c).cache_hit is True
+    # b was evicted: recompiles (miss) ...
+    cb = omp.compile(b, mesh, env_like=env_b)
+    assert cb.cache_hit is False
+    stats = omp.compile_cache_stats()
+    assert stats["misses"] == 4 and stats["size"] == 2
+    # ... and the recompiled entry still computes the right answer
+    np.testing.assert_array_equal(np.asarray(cb(env_b)["y"]),
+                                  np.asarray(b(env_b)["y"]))
+
+
+def test_cache_eviction_stats_stay_consistent(monkeypatch):
+    """Filling far past the cap keeps size == cap and every probe of a
+    live key a hit."""
+    from repro.core import api
+
+    omp.clear_compile_cache()
+    monkeypatch.setattr(api, "_CACHE_CAP", 3)
+    mesh = mesh1()
+    blocks = [_distinct_block(i) for i in range(8)]
+    for blk, env in blocks:
+        omp.compile(blk, mesh, env_like=env)
+    stats = omp.compile_cache_stats()
+    assert stats["size"] == 3 and stats["misses"] == 8
+    # the 3 most recent survive; older ones are gone
+    for blk, env in blocks[-3:]:
+        assert omp.compile(blk, mesh, env_like=env).cache_hit is True
+    for blk, env in blocks[:2]:
+        assert omp.compile(blk, mesh, env_like=env).cache_hit is False
+
+
+# ---------------------------------------------------------------------------
+# Cache thread-safety (ISSUE 7: concurrent server prerequisite)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_thread_hammer_exact_stats_and_no_corruption():
+    """Many threads hammering warm keys (lock-free hits) while a writer
+    inserts fresh keys (locked misses): counters stay *exact* — the
+    historical ``_STATS[k] += 1`` lost increments — and every result
+    stays correct."""
+    import random
+    import threading
+
+    omp.clear_compile_cache()
+    mesh = mesh1()
+    warm = [_distinct_block(f"w{i}") for i in range(4)]
+    for blk, env in warm:
+        omp.compile(blk, mesh, env_like=env)        # 4 misses
+
+    n_threads, n_iters, n_fresh = 8, 40, 6
+    errors = []
+    barrier = threading.Barrier(n_threads + 1)
+
+    def hammer(tid):
+        rng = random.Random(tid)
+        try:
+            barrier.wait()
+            for _ in range(n_iters):
+                blk, env = warm[rng.randrange(len(warm))]
+                comp = omp.compile(blk, mesh, env_like=env)
+                assert comp.cache_hit is True
+                np.testing.assert_array_equal(
+                    np.asarray(comp(env)["y"]), np.asarray(blk(env)["y"]))
+        except Exception as e:       # pragma: no cover - failure path
+            errors.append(e)
+
+    def writer():
+        try:
+            barrier.wait()
+            for i in range(n_fresh):
+                blk, env = _distinct_block(f"f{i}")
+                assert omp.compile(blk, mesh,
+                                   env_like=env).cache_hit is False
+        except Exception as e:       # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)] + [threading.Thread(target=writer)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    stats = omp.compile_cache_stats()
+    assert stats["hits"] == n_threads * n_iters
+    assert stats["misses"] == len(warm) + n_fresh
+    assert stats["size"] == len(warm) + n_fresh
+
+
+def test_env_signature_never_touches_the_device():
+    """Cache probes must not device-put python scalars/lists (it made
+    every probe of a scalar-bearing env a transfer); the derived dtypes
+    still match what jnp.asarray would have produced."""
+    from repro.core.api import _env_signature
+
+    env = {"a": np.zeros((2, 3), np.float32), "b": 1.5, "c": 7,
+           "d": [1.0, 2.0], "e": True, "f": jnp.zeros((4,), jnp.int32)}
+    with jax.transfer_guard("disallow"):
+        sig = _env_signature(env)
+    assert dict((k, (s, d)) for k, s, d in sig) == {
+        "a": ((2, 3), "float32"),
+        "b": ((), str(jnp.asarray(1.5).dtype)),
+        "c": ((), str(jnp.asarray(7).dtype)),
+        "d": ((2,), "float32"),
+        "e": ((), "bool"),
+        "f": ((4,), "int32"),
+    }

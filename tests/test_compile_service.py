@@ -1,0 +1,176 @@
+"""CompileService: single-flight dedup, concurrency, straggler hooks.
+
+Pins the ISSUE acceptance criterion: N client threads submitting
+overlapping programs get bit-identical results to serial execution,
+with exactly ONE cold compile per structural key.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import omp
+from repro.compat import make_mesh
+from repro.runtime.straggler import StragglerMonitor
+from repro.serving import CompileService
+
+
+def mesh1():
+    return make_mesh((len(jax.devices()),), ("data",))
+
+
+def _block(tag, n=16):
+    scale = float(sum(ord(ch) for ch in str(tag)))
+
+    @omp.parallel_for(stop=n, name=f"svc{tag}")
+    def block(i, env):
+        return {"y": omp.at(i, env["x"][i] * scale + 1.0)}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    return block, env
+
+
+def test_serial_smoke_and_stats():
+    omp.clear_compile_cache()
+    svc = CompileService(mesh1())
+    blk, env = _block("a")
+    out1 = svc.run(blk, env)
+    out2 = svc.run(blk, env)
+    np.testing.assert_array_equal(np.asarray(out1["y"]),
+                                  np.asarray(blk(env)["y"]))
+    np.testing.assert_array_equal(np.asarray(out1["y"]),
+                                  np.asarray(out2["y"]))
+    assert svc.stats.requests == 2
+    assert svc.stats.cold_compiles == 1
+    assert svc.stats.warm_hits == 1
+    d = svc.stats.as_dict()
+    assert d["requests"] == 2 and "compile_cache" in d
+
+
+def test_single_flight_exactly_one_cold_compile_per_key():
+    """The acceptance criterion: many racing clients, overlapping keys,
+    bit-identical to serial, exactly one compile per structural key."""
+    omp.clear_compile_cache()
+    programs = [_block(t) for t in ("p0", "p1", "p2")]
+    serial = [np.asarray(blk(env)["y"]) for blk, env in programs]
+
+    svc = CompileService(mesh1())
+    n_threads = 12
+    results = [[None] * len(programs) for _ in range(n_threads)]
+    errors = []
+    barrier = threading.Barrier(n_threads)
+
+    def client(tid):
+        try:
+            barrier.wait()
+            for j, (blk, env) in enumerate(programs):
+                results[tid][j] = np.asarray(svc.run(blk, env)["y"])
+        except Exception as e:            # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    for tid in range(n_threads):
+        for j in range(len(programs)):
+            np.testing.assert_array_equal(results[tid][j], serial[j])
+    # exactly one cold compile per structural key, all others coalesced
+    assert svc.stats.cold_compiles == len(programs)
+    assert svc.stats.requests == n_threads * len(programs)
+    assert (svc.stats.warm_hits + svc.stats.coalesced
+            == n_threads * len(programs) - len(programs))
+    # the underlying compile cache saw exactly one miss per key too
+    cstats = omp.compile_cache_stats()
+    assert cstats["misses"] == len(programs)
+
+
+def test_compile_error_propagates_to_all_followers():
+    omp.clear_compile_cache()
+    svc = CompileService(mesh1())
+
+    @omp.parallel_for(stop=16, name="svcbad")
+    def bad(i, env):
+        return {"y": omp.at(i, env["missing_key"][i])}
+
+    env = {"x": jnp.arange(16, dtype=jnp.float32),
+           "y": jnp.zeros(16, jnp.float32)}
+    n_threads = 4
+    errors = []
+    barrier = threading.Barrier(n_threads)
+
+    def client():
+        barrier.wait()
+        try:
+            svc.run(bad, env)
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=client) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # every client observed the failure; nothing was published warm
+    assert len(errors) == n_threads
+    assert svc._compiled == {} and svc._inflight == {}
+
+
+def test_submit_returns_future():
+    omp.clear_compile_cache()
+    blk, env = _block("fut")
+    with CompileService(mesh1(), max_workers=2) as svc:
+        futs = [svc.submit(blk, env) for _ in range(4)]
+        outs = [f.result(timeout=60) for f in futs]
+    want = np.asarray(blk(env)["y"])
+    for out in outs:
+        np.testing.assert_array_equal(np.asarray(out["y"]), want)
+    assert svc.stats.cold_compiles == 1
+
+
+def test_warmup_counts_cold_compiles():
+    omp.clear_compile_cache()
+    svc = CompileService(mesh1())
+    pairs = [_block(t) for t in ("w0", "w1")]
+    env_like = pairs[0][1]
+    assert svc.warmup([blk for blk, _ in pairs], env_like) == 2
+    # a second warmup is free
+    assert svc.warmup([blk for blk, _ in pairs], env_like) == 0
+
+
+def test_straggler_evict_plans_degraded_remesh():
+    """A persistent slow device trips the monitor's spike budget and the
+    service pre-plans the degraded mesh + fires on_evict exactly once."""
+    omp.clear_compile_cache()
+    plans = []
+    svc = CompileService(
+        mesh1(),
+        monitor=StragglerMonitor(spike_factor=2.0, spike_budget=3),
+        on_evict=plans.append)
+    blk, env = _block("slow")
+    svc.run(blk, env)                       # warm the key
+    # feed a stable baseline, then a sustained spike
+    for _ in range(20):
+        svc._observe(0.010)
+    assert svc.remesh_plan is None
+    for _ in range(10):
+        svc._observe(0.200)
+    assert svc.remesh_plan is not None
+    assert svc.stats.evictions == 1 and plans == [svc.remesh_plan]
+    h = svc.health()
+    assert h["degraded"] is True
+    want_n = max(1, mesh1().devices.size - 1)
+    assert int(np.prod(h["remesh_plan"]["new_shape"])) <= want_n
+
+
+def test_suggest_rebalance_prefers_fast_devices():
+    svc = CompileService(mesh1())
+    owners = svc.suggest_rebalance(8, [1.0, 3.0])
+    assert len(owners) == 8
+    assert owners.count(1) > owners.count(0)

@@ -8,11 +8,17 @@ from repro.models import build_model
 from repro.serving import Request, ServeEngine
 
 
+_SETUP = None
+
+
 def _setup():
-    cfg = smoke_config("gemma3-1b")
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
+    global _SETUP
+    if _SETUP is None:
+        cfg = smoke_config("gemma3-1b")
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        _SETUP = (cfg, model, params)
+    return _SETUP
 
 
 def _greedy_reference(model, params, prompt, n_new):
@@ -47,6 +53,62 @@ def test_engine_matches_reference_greedy():
         assert r.done
         want = _greedy_reference(model, params, r.prompt, n_new)
         assert r.output == want, (r.rid, r.output, want)
+
+
+def test_run_until_drained_returns_completed_requests():
+    """Regression: the ``done`` list was never appended — callers
+    always got ``[]`` back even though every request finished."""
+    cfg, model, params = _setup()
+    engine = ServeEngine(model, params, n_slots=2, cache_len=64,
+                         compute_dtype=jnp.float32)
+    reqs = [Request(rid=i, prompt=[i + 1, i + 2], max_new_tokens=2)
+            for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_until_drained()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(r.done for r in done)
+    # completion order, not submission order, and no duplicates
+    assert len(done) == len(set(id(r) for r in done)) == 3
+    # a second drain has nothing left to return
+    assert engine.run_until_drained() == []
+
+
+def test_prefill_completion_gap_max_new_tokens_one():
+    """Regression: a request satisfied at prefill (max_new_tokens=1)
+    was never marked done at admission — it burned a decode tick in a
+    dead slot and overran its token budget by one."""
+    cfg, model, params = _setup()
+    engine = ServeEngine(model, params, n_slots=2, cache_len=64,
+                         compute_dtype=jnp.float32)
+    reqs = [Request(rid=i, prompt=[1 + i, 2 + i, 3 + i], max_new_tokens=1)
+            for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_until_drained()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    for r in reqs:
+        assert r.done
+        assert len(r.output) == 1, (r.rid, r.output)
+        want = _greedy_reference(model, params, r.prompt, 1)
+        assert r.output == want
+
+
+def test_prefill_eos_completes_at_admission():
+    """A prompt whose prefill token IS eos_id must complete without
+    occupying a slot (the tick() done-check, applied at admission)."""
+    cfg, model, params = _setup()
+    prompt = [5, 6, 7]
+    first = _greedy_reference(model, params, prompt, 1)[0]
+    engine = ServeEngine(model, params, n_slots=1, cache_len=64,
+                         eos_id=first, compute_dtype=jnp.float32)
+    eos_req = Request(rid=0, prompt=prompt, max_new_tokens=8)
+    engine.submit(eos_req)
+    engine._admit()
+    assert eos_req.done and eos_req.output == [first]
+    # the slot stayed free for the next request
+    assert engine.slot_req == [None]
+    assert engine.take_finished() == [eos_req]
 
 
 def test_continuous_batching_reuses_slots():

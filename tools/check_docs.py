@@ -30,15 +30,18 @@ REQUIRED_SECTIONS = {
                   "## Communication scheduling",
                   "## Nested loops & 2-D meshes",
                   "## Pallas kernels",
+                  "## Serving",
                   "omp.compile"],
     "EXPERIMENTS.md": ["## Perf-D", "## Perf-E", "## Perf-G",
-                       "## Perf-H"],
+                       "## Perf-H", "## Perf-I"],
     "docs/PAPER_MAP.md": ["core/comm.py", "`collapse(2)`", "LoopNest",
                           "core/nest.py", "core/api.py", "`omp.compile`",
                           "plan_comm", "core/comm_schedule.py",
                           "schedule_comm",
                           "further optimized by software engineers",
-                          "core/pallas_lower.py", "`Lowering.pallas`"],
+                          "core/pallas_lower.py", "`Lowering.pallas`",
+                          "serving/compile_service.py",
+                          "core/aot_store.py"],
 }
 
 # repo-relative path tokens inside backticks, e.g. `src/repro/core/plan.py`
