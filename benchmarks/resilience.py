@@ -1,0 +1,135 @@
+"""Fault-tolerant runtime benchmark (EXPERIMENTS.md §Perf-J).
+
+Measures what resilience costs — and what the caches buy back when it
+engages:
+
+* **injection overhead** — ``Compiled.run`` with no hook vs an
+  installed no-fault plan (the always-on cost of the hook points);
+* **retry overhead** — a healthy call through
+  :class:`~repro.runtime.resilient.ResilientExecutor` vs the bare
+  artifact (one try/except + output validation);
+* **cold vs warm recovery** — injected persistent device loss on an
+  8-device mesh forces the degraded-mesh path (7 devices): the *cold*
+  number recompiles the program on the shrunk mesh from scratch; the
+  *warm* number hits the persistent AOT store populated by the first
+  recovery.  Acceptance bar: warm >= 5x faster than cold;
+* **weighted schedule overhead** — the straggler-weighted chunk deal
+  vs the cyclic one (same program, same mesh, warm).
+
+Self-contained: forces 8 virtual CPU devices, prints
+``resilience_*,us,derived`` CSV rows (relayed by ``benchmarks/run.py
+--sections resilience``; the committed ``benchmarks/BENCH_resilience.json``
+is that section's ``--json`` payload).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platforms", "cpu")
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, warmup=2, iters=5):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def main() -> None:
+    from repro import omp
+    from repro.compat import make_mesh
+    from repro.runtime.fault_injection import FaultPlan, FaultSpec, inject
+    from repro.runtime.resilient import ResilientExecutor, RetryPolicy
+
+    cache_dir = tempfile.mkdtemp(prefix="repro-resilience-")
+    omp.enable_persistent_cache(cache_dir)
+
+    n = 4096
+    mesh = make_mesh((8,), ("data",))
+
+    @omp.parallel_for(stop=n, name="resil", schedule=omp.dynamic(64))
+    def block(i, env):
+        return {"y": omp.at(i, env["x"][i] * 1.0001 + 0.5)}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    compiled = omp.compile(block, mesh, env_like=env)
+    ref = np.asarray(block(env)["y"])
+    base = compiled.run(env)
+    np.testing.assert_array_equal(np.asarray(base["y"]), ref)
+
+    # -- injection-hook overhead (no faults scripted) ----------------------
+    bare_us = _timeit(lambda: jax.block_until_ready(compiled.run(env)["y"]))
+    with inject(FaultPlan()):
+        hooked_us = _timeit(
+            lambda: jax.block_until_ready(compiled.run(env)["y"]))
+    _row("resilience_hook_overhead", hooked_us - bare_us,
+         f"bare_us={bare_us:.1f};hooked_us={hooked_us:.1f}")
+
+    # -- retry-wrapper overhead (healthy path) -----------------------------
+    rex = ResilientExecutor(compiled)
+    wrapped_us = _timeit(lambda: jax.block_until_ready(rex.run(env)["y"]))
+    _row("resilience_wrapper_overhead", wrapped_us - bare_us,
+         f"bare_us={bare_us:.1f};wrapped_us={wrapped_us:.1f}")
+
+    # -- cold vs warm degraded-mesh recovery -------------------------------
+    def recover_once() -> float:
+        rex = ResilientExecutor(compiled,
+                                policy=RetryPolicy(max_retries=0))
+        plan = FaultPlan((FaultSpec(call=0, kind="device_loss", rank=3),))
+        with inject(plan):
+            t0 = time.perf_counter()
+            out = rex.run(env)
+            dt = time.perf_counter() - t0
+        assert rex.degraded, "recovery did not engage"
+        np.testing.assert_array_equal(np.asarray(out["y"]), ref)
+        rex.reset()
+        return dt * 1e6
+
+    omp.clear_compile_cache()        # cold: no in-process entry, AOT
+    cold_us = recover_once()         # store has only the 8-device key
+    omp.clear_compile_cache()        # warm: in-process cache cleared,
+    warm_us = recover_once()         # 7-device AOT entry now on disk
+    ratio = cold_us / max(warm_us, 1e-9)
+    _row("resilience_recovery_cold", cold_us, "devices=8to7")
+    _row("resilience_recovery_warm", warm_us,
+         f"devices=8to7;speedup={ratio:.1f};ok={int(ratio >= 5.0)}")
+    if ratio < 5.0:
+        print(f"WARNING: warm recovery speedup {ratio:.1f}x < 5x bar",
+              file=sys.stderr)
+
+    # -- straggler-weighted schedule overhead ------------------------------
+    weighted = omp.compile(
+        block, mesh, lowering="collective",
+        chunk_weights=[2.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.5],
+        env_like=env)
+    out_w = weighted.run(env)
+    np.testing.assert_array_equal(np.asarray(out_w["y"]), ref)
+    weighted_us = _timeit(
+        lambda: jax.block_until_ready(weighted.run(env)["y"]))
+    _row("resilience_weighted_schedule", weighted_us,
+         f"cyclic_us={bare_us:.1f};"
+         f"overhead_pct={100.0 * (weighted_us - bare_us) / bare_us:.1f}")
+
+
+if __name__ == "__main__":
+    main()

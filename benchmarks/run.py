@@ -20,6 +20,10 @@ Sections:
   restored) and concurrent client load over CompileService; the
   committed benchmarks/BENCH_serving.json is this section's --json
   payload.
+* resilience_*: fault-tolerant runtime (EXPERIMENTS §Perf-J) —
+  injection/retry overheads and cold-vs-warm degraded-mesh recovery;
+  the committed benchmarks/BENCH_resilience.json is this section's
+  --json payload.
 * kernels_*: Pallas interpret-mode kernels vs jnp oracles.
 * train_step_* / decode_step_*: smoke-size LM steps (end-to-end
   substrate sanity + µs tracking).
@@ -246,6 +250,15 @@ def bench_serving():
     _bench_subprocess("serving_load.py", "serving_", "serving_load")
 
 
+def bench_resilience():
+    """Fault-tolerant runtime: injection-hook / retry-wrapper overhead,
+    cold vs warm degraded-mesh recovery (the >= 5x warm-AOT bar), and
+    the straggler-weighted schedule cost (EXPERIMENTS.md §Perf-J; the
+    committed benchmarks/BENCH_resilience.json is this section's --json
+    payload)."""
+    _bench_subprocess("resilience.py", "resilience_", "resilience")
+
+
 # ---------------------------------------------------------------------------
 # Compilation cache (omp.compile cold vs warm)
 # ---------------------------------------------------------------------------
@@ -373,7 +386,7 @@ def main(argv=None) -> None:
         "--sections", default=None,
         help="comma-separated subset of sections to run "
              "(polybench,region,stencil_halo,heat2d,roofline,"
-             "compile_cache,serving,kernels,lm)")
+             "compile_cache,serving,resilience,kernels,lm)")
     args = parser.parse_args(argv)
 
     sections = {
@@ -384,6 +397,7 @@ def main(argv=None) -> None:
         "roofline": bench_roofline,
         "compile_cache": bench_compile_cache,
         "serving": bench_serving,
+        "resilience": bench_resilience,
         "kernels": bench_kernels,
         "lm": bench_lm_steps,
     }
@@ -428,6 +442,14 @@ def main(argv=None) -> None:
                         if r["name"].startswith("serving_")]
         if serving_rows:
             payload["serving"] = serving_rows
+        # The resilience snapshot: fault-injection overheads + cold/warm
+        # degraded-mesh recovery (the committed
+        # benchmarks/BENCH_resilience.json is this section from
+        # `--sections resilience`).
+        resilience_rows = [r for r in RESULTS
+                           if r["name"].startswith("resilience_")]
+        if resilience_rows:
+            payload["resilience"] = resilience_rows
         with open(args.json, "w", encoding="utf-8") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {len(RESULTS)} results to {args.json}", flush=True)

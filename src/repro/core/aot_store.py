@@ -57,6 +57,13 @@ _MAGIC = b"RPROAOT\x01"
 #: import — this is how subprocess benchmarks and CI opt in.
 ENV_VAR = "REPRO_AOT_CACHE_DIR"
 
+#: Optional size cap (bytes) on the store directory.  When the cap is
+#: set — via this variable or the ``max_bytes=`` constructor argument —
+#: every save sweeps least-recently-*used* entries (mtime order; load
+#: hits touch the file) until the directory fits.  Unset/invalid/<=0
+#: means unbounded.
+ENV_MAX_BYTES = "REPRO_AOT_CACHE_MAX_BYTES"
+
 
 # ---------------------------------------------------------------------------
 # Stable structural fingerprints
@@ -132,7 +139,8 @@ def fingerprint(*parts: Any) -> str:
 
 def empty_stats() -> dict:
     return {"disk_hits": 0, "disk_misses": 0, "disk_errors": 0,
-            "disk_bytes_read": 0, "disk_bytes_written": 0}
+            "disk_bytes_read": 0, "disk_bytes_written": 0,
+            "evictions": 0, "evicted_bytes": 0}
 
 
 class AOTStore:
@@ -143,10 +151,19 @@ class AOTStore:
     dependency — every failure is counted in :attr:`stats`.
     """
 
-    def __init__(self, path: str) -> None:
+    def __init__(self, path: str, max_bytes: int | None = None) -> None:
         self.path = os.path.abspath(os.path.expanduser(path))
         os.makedirs(self.path, exist_ok=True)
         self.stats = empty_stats()
+        if max_bytes is None:
+            raw = os.environ.get(ENV_MAX_BYTES, "")
+            try:
+                max_bytes = int(raw) if raw else None
+            except ValueError:
+                max_bytes = None
+        self.max_bytes = (max_bytes
+                          if max_bytes is not None and max_bytes > 0
+                          else None)
 
     # -- key -> file -------------------------------------------------------
 
@@ -194,7 +211,48 @@ class AOTStore:
             self.stats["disk_errors"] += 1
             return False
         self.stats["disk_bytes_written"] += len(blob)
+        self._evict(protect=key)
         return True
+
+    # -- eviction ----------------------------------------------------------
+
+    def _evict(self, protect: str | None = None) -> None:
+        """LRU sweep: drop oldest-by-mtime entries until the directory
+        fits :attr:`max_bytes`.  The just-written ``protect`` key is
+        never dropped (a cap smaller than one entry must not turn every
+        save into an immediate self-eviction).  Like everything else in
+        the store, a file vanishing or erroring mid-sweep is tolerated,
+        never raised."""
+        if self.max_bytes is None:
+            return
+        try:
+            names = os.listdir(self.path)
+        except OSError:
+            return
+        entries, total = [], 0
+        for f in names:
+            if not f.endswith(".aot"):
+                continue
+            p = os.path.join(self.path, f)
+            try:
+                st = os.stat(p)
+            except OSError:
+                continue
+            entries.append((st.st_mtime, st.st_size, p, f[:-4]))
+            total += st.st_size
+        entries.sort()
+        for _mtime, size, p, k in entries:
+            if total <= self.max_bytes:
+                break
+            if k == protect:
+                continue
+            try:
+                os.unlink(p)
+            except OSError:
+                continue
+            total -= size
+            self.stats["evictions"] += 1
+            self.stats["evicted_bytes"] += size
 
     # -- load --------------------------------------------------------------
 
@@ -241,4 +299,8 @@ class AOTStore:
             return None
         self.stats["disk_hits"] += 1
         self.stats["disk_bytes_read"] += len(blob)
+        try:
+            os.utime(path)               # refresh LRU recency on hit
+        except OSError:
+            pass
         return exe

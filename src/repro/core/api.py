@@ -60,6 +60,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
+import math
 import os
 import threading
 from typing import Any, Mapping
@@ -148,6 +149,43 @@ def _coerce_enum(enum_cls, value, field):
         f"got {value!r}")
 
 
+def _normalize_chunk_weights(cw):
+    """Canonicalise ``Options.chunk_weights``: a flat tuple of floats
+    (rank-1), or a 2-tuple of per-axis entries (each a float tuple or
+    ``None``) for ``collapse=2``."""
+
+    def flat(seq, where):
+        try:
+            vals = tuple(float(x) for x in seq)
+        except (TypeError, ValueError):
+            raise CompileError(
+                f"Options.chunk_weights{where} must be a sequence of "
+                f"numbers, got {seq!r}") from None
+        if not vals:
+            raise CompileError(f"Options.chunk_weights{where} is empty")
+        for v in vals:
+            if not math.isfinite(v) or v <= 0:
+                raise CompileError(
+                    f"Options.chunk_weights{where} entries must be "
+                    f"finite and > 0, got {vals}")
+        return vals
+
+    if not isinstance(cw, (tuple, list)):
+        raise CompileError(
+            "Options.chunk_weights must be a per-device weight vector "
+            "(or a 2-tuple of per-axis vectors for collapse=2), got "
+            f"{cw!r}")
+    if any(e is None or isinstance(e, (tuple, list)) for e in cw):
+        if len(cw) != 2 or not all(
+                e is None or isinstance(e, (tuple, list)) for e in cw):
+            raise CompileError(
+                "per-axis Options.chunk_weights must be a 2-tuple of "
+                f"weight vectors (or None per axis), got {cw!r}")
+        return tuple(None if e is None else flat(e, f"[{d}]")
+                     for d, e in enumerate(cw))
+    return flat(cw, "")
+
+
 @dataclasses.dataclass(frozen=True)
 class Options:
     """Compilation options — the typed replacement for the historical
@@ -194,6 +232,16 @@ class Options:
     runs the kernels in interpret mode off-TPU (CPU/CI) and compiled on
     TPU; ``True``/``False`` forces.  Rejected under any other
     lowering."""
+
+    chunk_weights: Any = None
+    """Per-device speed weights for a straggler-weighted schedule
+    (``runtime.straggler.rebalance_chunks`` apportions chunk ownership
+    proportionally; faster devices run more chunks).  Rank-1: a
+    sequence of P positive floats; ``collapse=2``: a 2-tuple of
+    per-axis vectors (``None`` keeps an axis cyclic).  Collective
+    chunk executor only — rejected under ``Lowering.MASTER_WORKER`` /
+    ``Lowering.PALLAS`` and under ``Lowering.FUSED`` on regions (ring
+    halo exchanges assume cyclic neighbors)."""
 
     def __post_init__(self) -> None:
         object.__setattr__(
@@ -287,6 +335,18 @@ class Options:
                 "Lowering.PALLAS; this compile uses "
                 f"lowering={self.lowering.value!r}.  Drop "
                 "pallas_interpret or set lowering=\"pallas\".")
+
+        if self.chunk_weights is not None:
+            object.__setattr__(self, "chunk_weights",
+                               _normalize_chunk_weights(self.chunk_weights))
+            if self.lowering in (Lowering.MASTER_WORKER, Lowering.PALLAS):
+                raise CompileError(
+                    "Options.chunk_weights (straggler-weighted schedule) "
+                    "requires the collective chunk executor; "
+                    f"lowering={self.lowering.value!r} assumes cyclic "
+                    "chunk ownership (explicit master/worker row math / "
+                    "tiled kernel grids).  Use Lowering.COLLECTIVE, or "
+                    "the default FUSED on a single block.")
 
     def describe(self) -> str:
         sched = (f"{self.schedule.kind}({self.schedule.chunk})"
@@ -565,6 +625,37 @@ def _validate_combination(program, options: Options, num) -> None:
                 "Lowering.MASTER_WORKER needs >= 2 mesh ranks (rank 0 is "
                 f"the master); this mesh has {num}.")
 
+    cw = options.chunk_weights
+    if cw is not None:
+        if isinstance(program, pragma.ParallelRegion) \
+                and options.lowering is Lowering.FUSED:
+            raise CompileError(
+                "Options.chunk_weights on a region requires "
+                "Lowering.COLLECTIVE (per-loop staging): the fused "
+                "region executor's ring halo exchanges and slab "
+                "residency assume cyclic chunk ownership.")
+        nested = any(e is None or isinstance(e, tuple) for e in cw)
+        if rank == 2:
+            if not nested:
+                raise CompileError(
+                    "collapse=2 needs per-axis chunk_weights: a 2-tuple "
+                    "of weight vectors (or None to keep an axis "
+                    f"cyclic), got {cw!r}")
+            for d, (e, p_d) in enumerate(zip(cw, num)):
+                if e is not None and len(e) != p_d:
+                    raise CompileError(
+                        f"chunk_weights[{d}] has {len(e)} entries but "
+                        f"mesh axis {d} has {p_d} devices")
+        else:
+            if nested:
+                raise CompileError(
+                    "rank-1 loops need a flat per-device chunk_weights "
+                    f"vector, got the per-axis form {cw!r}")
+            if len(cw) != num:
+                raise CompileError(
+                    f"chunk_weights has {len(cw)} entries but the mesh "
+                    f"axis has {num} devices")
+
 
 # ---------------------------------------------------------------------------
 # Pipeline execution
@@ -605,7 +696,7 @@ def _build_block(program, env_shapes, num, axis, options) -> _Artifacts:
     chunks_axes = plan_mod.plan_schedule(
         program, nest, num, lowering=low,
         paper_master_excluded=options.paper_master_excluded,
-        schedule=options.schedule)
+        schedule=options.schedule, weights=options.chunk_weights)
     plan = plan_mod.decide_strategies(
         program, nest, ctx, chunks_axes, axis=axis, lowering=low,
         shard_inputs=shard_inputs)
@@ -726,7 +817,7 @@ def _build_region_staged(region, env_shapes, num, axis,
         chunks_axes = plan_mod.plan_schedule(
             stage, nest, num, lowering=low,
             paper_master_excluded=options.paper_master_excluded,
-            schedule=options.schedule)
+            schedule=options.schedule, weights=options.chunk_weights)
         p = plan_mod.decide_strategies(
             stage, nest, ctx, chunks_axes, axis=axis, lowering=low,
             shard_inputs=shard_inputs)
@@ -791,7 +882,8 @@ def _make_executor(program, mesh, axis, options: Options, exe_plan):
             schedule_override=options.schedule,
             stage_plans=None if fused else exe_plan,
             use_pallas=use_pallas,
-            pallas_interpret=options.pallas_interpret)
+            pallas_interpret=options.pallas_interpret,
+            chunk_weights=options.chunk_weights)
     return tf.DistributedProgram(
         program=program, mesh=mesh, plan=exe_plan, axis=axis,
         lowering=_lowering_str(options),
@@ -801,7 +893,8 @@ def _make_executor(program, mesh, axis, options: Options, exe_plan):
         schedule_override=options.schedule,
         comm_schedule=options.comm_schedule,
         use_pallas=use_pallas,
-        pallas_interpret=options.pallas_interpret)
+        pallas_interpret=options.pallas_interpret,
+        chunk_weights=options.chunk_weights)
 
 
 def _export_and_save(dkey: str, exe, sig: tuple):
@@ -829,6 +922,14 @@ if os.environ.get(aot_store_mod.ENV_VAR):
 # ---------------------------------------------------------------------------
 # The Compiled artifact
 # ---------------------------------------------------------------------------
+
+#: Fault-injection hook (repro.runtime.fault_injection installs a
+#: callable here inside ``inject()``).  Called as ``hook("run")`` at
+#: every ``Compiled.run`` entry and ``hook("run_exit", out)`` on exit
+#: (the return value replaces ``out`` — output corruption faults).
+#: ``None`` in production: the cost when inactive is one attribute
+#: check per call.
+_fault_hook = None
 
 
 @dataclasses.dataclass
@@ -875,19 +976,26 @@ class Compiled:
     # -- execution ---------------------------------------------------------
 
     def run(self, env: Mapping[str, Any]) -> dict:
+        if _fault_hook is not None:
+            _fault_hook("run")
+        out = None
         self._ensure(env)
         if self._runner is not None:
             try:
-                return dict(self._runner(env))
+                out = dict(self._runner(env))
             except Exception:
                 # The persisted executable refused these inputs (aval /
                 # layout / backend skew).  The store must never turn
                 # into a crash: drop the runner and fall back to the
                 # planned executor.
                 self._runner = None
-        if self._exe is None:
-            self._ensure(env, allow_restore=False)
-        return self._exe(env)
+        if out is None:
+            if self._exe is None:
+                self._ensure(env, allow_restore=False)
+            out = self._exe(env)
+        if _fault_hook is not None:
+            out = _fault_hook("run_exit", out)
+        return out
 
     __call__ = run
 

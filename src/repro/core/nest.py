@@ -153,13 +153,38 @@ def window_extent(chunk: int, halo: tuple[int, int]) -> int:
     return chunk + (b_max - b_min)
 
 
+def slot_chunk_ids(ch) -> np.ndarray:
+    """Global chunk id at each slot position.  Identity for the cyclic
+    deal; the plan's ``slot_map`` permutation for straggler-weighted
+    schedules (sentinel slots point at a padding chunk whose iterations
+    are all masked)."""
+    if ch.slot_map is not None:
+        return np.asarray(ch.slot_map, dtype=np.int64)
+    return np.arange(ch.num_chunks, dtype=np.int64)
+
+
+def restore_chunk_order(ch) -> np.ndarray | None:
+    """Slot index of every *real* chunk, in global chunk order — the
+    inverse of ``slot_map`` used to reassemble outputs.  ``None`` for
+    the cyclic deal (a plain reshape already restores order)."""
+    if ch.slot_map is None:
+        return None
+    inv = np.empty(ch.real_chunks, dtype=np.int64)
+    for s, j in enumerate(ch.slot_map):
+        if j < ch.real_chunks:
+            inv[j] = s
+    return inv
+
+
 def window_rows(ch, halo: tuple[int, int], nrows: int) -> np.ndarray:
     """Static (jit-level) row indices of every chunk's read window:
     ``(num_chunks, width)``, clipped in-bounds (out-of-range rows are
-    only ever consumed by masked padding lanes)."""
+    only ever consumed by masked padding lanes).  Rows come out in
+    *slot* order so the trailing ``(n_loc, P, ...)`` reshape always
+    places a device's slabs on the device axis, weighted or not."""
     b_min, _ = halo
     width = window_extent(ch.chunk, halo)
-    rows = (np.arange(ch.num_chunks)[:, None] * ch.chunk + b_min
+    rows = (slot_chunk_ids(ch)[:, None] * ch.chunk + b_min
             + np.arange(width)[None, :])
     return np.clip(rows, 0, max(0, nrows - 1))
 
@@ -183,10 +208,15 @@ def device_window_rows(ch, halo: tuple[int, int], device_index,
 
 
 def pad_reshape(x, ch):
-    """(T, *rest) -> (n_loc, P, c, *rest) chunk-cyclic layout."""
+    """(T, *rest) -> (n_loc, P, c, *rest) chunk-cyclic (or, with a
+    weighted plan, slot-ordered) layout."""
     pad = ch.padded_trip - x.shape[0]
     if pad:
         x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    if ch.slot_map is not None:
+        chunks = x.reshape((ch.num_chunks, ch.chunk) + x.shape[1:])
+        x = chunks[slot_chunk_ids(ch)].reshape(
+            (ch.padded_trip,) + x.shape[1:])
     return x.reshape((ch.local_chunks, ch.num_devices, ch.chunk) + x.shape[1:])
 
 
@@ -217,8 +247,15 @@ def halo_slabs2(x, chs, halos):
 
 
 def unpad_flat(slabs, ch, t: int):
-    """(n_loc, P, c, *rest) -> (T, *rest)."""
-    flat = slabs.reshape((ch.padded_trip,) + slabs.shape[3:])
+    """(n_loc, P, c, *rest) -> (T, *rest).  With a weighted plan the
+    slabs sit in slot order; the inverse slot gather puts the real
+    chunks back in global order before the flatten."""
+    inv = restore_chunk_order(ch)
+    if inv is None:
+        flat = slabs.reshape((ch.padded_trip,) + slabs.shape[3:])
+        return flat[:t]
+    chunks = slabs.reshape((ch.num_chunks, ch.chunk) + slabs.shape[3:])
+    flat = chunks[inv].reshape((len(inv) * ch.chunk,) + slabs.shape[3:])
     return flat[:t]
 
 
@@ -226,8 +263,20 @@ def unpad_flat2(slabs, chs, trips):
     """(n_i, P_i, c_i, n_j, P_j, c_j, *rest) -> (T_i, T_j, *rest)."""
     ch_i, ch_j = chs
     t_i, t_j = trips
-    flat = slabs.reshape((ch_i.padded_trip, ch_j.padded_trip)
-                         + slabs.shape[6:])
+    inv_i = restore_chunk_order(ch_i)
+    inv_j = restore_chunk_order(ch_j)
+    if inv_i is None and inv_j is None:
+        flat = slabs.reshape((ch_i.padded_trip, ch_j.padded_trip)
+                             + slabs.shape[6:])
+        return flat[:t_i, :t_j]
+    idx_i = inv_i if inv_i is not None else np.arange(ch_i.num_chunks)
+    idx_j = inv_j if inv_j is not None else np.arange(ch_j.num_chunks)
+    chunks = slabs.reshape(
+        (ch_i.num_chunks, ch_i.chunk, ch_j.num_chunks, ch_j.chunk)
+        + slabs.shape[6:])
+    chunks = jnp.take(jnp.take(chunks, idx_i, axis=0), idx_j, axis=2)
+    flat = chunks.reshape((len(idx_i) * ch_i.chunk,
+                           len(idx_j) * ch_j.chunk) + slabs.shape[6:])
     return flat[:t_i, :t_j]
 
 

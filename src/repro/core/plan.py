@@ -166,18 +166,31 @@ def plan_schedule(
     lowering: str = "collective",
     paper_master_excluded: bool | None = None,
     schedule: pragma.Schedule | None = None,
+    weights=None,
 ) -> tuple:
     """Compiler pass **schedule**: the chunking math of §3.1.3 (Table 2)
     as per-axis :class:`~repro.core.schedule.ChunkPlan`\\ s.
 
     ``schedule`` overrides the program's own clause (the
     :class:`~repro.core.api.Options` schedule override); ``None`` keeps
-    the clause written on the pragma."""
+    the clause written on the pragma.  ``weights`` (per-device, per-axis
+    for rank 2) switches the cyclic deal to the straggler-weighted one
+    — collective lowering only (the master/worker row math and the
+    fused ring exchanges assume cyclic ownership)."""
+    if weights is not None and lowering != "collective":
+        raise LoopNotCanonical(
+            "straggler-weighted schedules require the collective "
+            f"lowering, not {lowering!r}")
     if nest.rank == 2:
         scheds = ((schedule,) * nest.rank if schedule is not None
                   else program.schedules)
-        return schedule_mod.make_nest_chunk_plans(nest, scheds, num_devices)
+        return schedule_mod.make_nest_chunk_plans(
+            nest, scheds, num_devices, weights=weights)
     sched = schedule if schedule is not None else program.schedule
+    if weights is not None and not any(
+            e is None or hasattr(e, "__len__") for e in weights):
+        weights = (weights,)    # flat rank-1 vector -> per-axis form
+    w0 = weights[0] if weights is not None else None
     if paper_master_excluded is None:
         paper_master_excluded = lowering == "master_worker"
 
@@ -198,6 +211,7 @@ def plan_schedule(
     return (schedule_mod.make_chunk_plan(
         nest.axes[0], sched, compute_devices,
         paper_master_excluded=False,  # already folded into compute_devices
+        weights=w0,
     ),)
 
 
@@ -211,6 +225,7 @@ def make_plan(
     shard_inputs: bool = False,
     paper_master_excluded: bool | None = None,
     schedule: pragma.Schedule | None = None,
+    weights=None,
 ) -> DistPlan:
     """analyze → schedule → plan, composed (the historical one-call
     planning surface; :func:`repro.core.api.compile` runs the passes
@@ -236,7 +251,8 @@ def make_plan(
     nest, ctx = analyze_program(program, env)
     chunks_axes = plan_schedule(
         program, nest, num_devices, lowering=lowering,
-        paper_master_excluded=paper_master_excluded, schedule=schedule)
+        paper_master_excluded=paper_master_excluded, schedule=schedule,
+        weights=weights)
     return decide_strategies(
         program, nest, ctx, chunks_axes, axis=axis, lowering=lowering,
         shard_inputs=shard_inputs)

@@ -448,6 +448,7 @@ class DistributedRegion:
     stage_plans: tuple | None = None    # staged path: per-loop (name, plan)
     use_pallas: bool = False            # Lowering.PALLAS: tiled kernels
     pallas_interpret: bool | None = None
+    chunk_weights: tuple | None = None  # straggler-weighted (staged only)
 
     def __call__(self, env: Mapping[str, Any]) -> dict[str, Any]:
         from repro.core import comm_schedule as cs_mod
@@ -487,6 +488,7 @@ class DistributedRegion:
                 paper_master_excluded=self.paper_master_excluded,
                 schedule_override=self.schedule_override,
                 comm_schedule=self.comm_schedule,
+                chunk_weights=self.chunk_weights,
             )(out)
         return out
 
@@ -563,6 +565,7 @@ def _execute_region(dr: DistributedRegion, env: dict) -> dict:
 
     if dr.plan.rank == 2:
         return _execute_region2(dr, env)
+    tf._maybe_fault("region")
     rp = dr.plan
     mesh, axis = dr.mesh, rp.axis
     env_dtypes = {k: v.dtype for k, v in env.items()}
@@ -838,6 +841,8 @@ def _execute_region2(dr: DistributedRegion, env: dict) -> dict:
     mesh; slabs stay resident as ``(n_i, c_i, n_j, c_j, *rest)`` stacks,
     halo boundaries run as row+column ``ppermute`` rings."""
     from repro.core import comm_schedule as cs_mod
+
+    tf._maybe_fault("region2")
 
     rp = dr.plan
     mesh = dr.mesh

@@ -35,6 +35,17 @@ class ChunkPlan:
     Iteration ``k`` (in ``[0, trip_count)``) lives in chunk ``k // chunk``;
     chunk ``j`` is executed by device ``j % num_devices`` as its local
     chunk number ``j // num_devices``.
+
+    With a per-device ``weights`` vector (straggler mitigation,
+    runtime/straggler.py) the cyclic deal is replaced by a proportional
+    one: ``owners[j]`` names the device that executes real chunk ``j``,
+    and ``slot_map[q * P + d]`` records which global chunk device ``d``
+    runs as its local chunk ``q`` (the *slot* layout that the staging
+    reshape ``(n_loc, P, c)`` realises).  Slots a device does not fill
+    hold a sentinel chunk index ``>= ceil(trip/chunk)`` whose
+    iterations all fall beyond ``trip_count`` and are masked out like
+    ordinary padding.  ``owners``/``slot_map`` are ``None`` for the
+    plain cyclic deal.
     """
 
     trip_count: int
@@ -43,13 +54,24 @@ class ChunkPlan:
     num_chunks: int            # K' — padded to a multiple of num_devices
     local_chunks: int          # n_loc = K' / P
     padded_trip: int           # K' * c >= trip_count
+    owners: tuple[int, ...] | None = None     # device owning real chunk j
+    slot_map: tuple[int, ...] | None = None   # slot q*P+d -> global chunk
+    weights: tuple[float, ...] | None = None  # per-device speed weights
 
     @property
     def padding(self) -> int:
         return self.padded_trip - self.trip_count
 
+    @property
+    def real_chunks(self) -> int:
+        """Chunks that hold at least one real iteration."""
+        return max(1, -(-self.trip_count // self.chunk))
+
     def owner_of_iteration(self, k: int) -> int:
-        return (k // self.chunk) % self.num_devices
+        j = k // self.chunk
+        if self.owners is not None:
+            return self.owners[j]
+        return j % self.num_devices
 
     def owner_of_last_iteration(self) -> int:
         if self.trip_count == 0:
@@ -57,6 +79,8 @@ class ChunkPlan:
         return self.owner_of_iteration(self.trip_count - 1)
 
     def global_chunk(self, device: int, local: int) -> int:
+        if self.slot_map is not None:
+            return self.slot_map[local * self.num_devices + device]
         return local * self.num_devices + device
 
 
@@ -76,19 +100,29 @@ def guided_chunk_size(trip_count: int, ranks: int) -> int:
     return max(1, trip_count // max(1, 2 * ranks))
 
 
-def make_nest_chunk_plans(nest, schedules, num_devices) -> tuple[ChunkPlan, ...]:
+def make_nest_chunk_plans(nest, schedules, num_devices,
+                          weights=None) -> tuple[ChunkPlan, ...]:
     """Per-axis chunk plans for a loop nest: axis ``d`` of the iteration
     space is dealt over ``num_devices[d]`` mesh ranks with its own
     schedule clause — the ``collapse(2)`` generalisation of the paper's
     single ``partSize`` split (each axis keeps the Table 2 chunking math
-    against its own trip count and rank count)."""
+    against its own trip count and rank count).  ``weights`` is an
+    optional per-axis sequence of per-device weight vectors (``None``
+    entries keep the cyclic deal on that axis)."""
     if not (len(nest.axes) == len(schedules) == len(num_devices)):
         raise ValueError(
             f"nest rank {len(nest.axes)} needs matching schedules "
             f"({len(schedules)}) and device counts ({len(num_devices)})")
+    if weights is None:
+        weights = (None,) * len(nest.axes)
+    if len(weights) != len(nest.axes):
+        raise ValueError(
+            f"nest rank {len(nest.axes)} needs one weight vector per "
+            f"axis, got {len(weights)}")
     return tuple(
-        make_chunk_plan(loop_d, sched_d, int(p_d))
-        for loop_d, sched_d, p_d in zip(nest.axes, schedules, num_devices))
+        make_chunk_plan(loop_d, sched_d, int(p_d), weights=w_d)
+        for loop_d, sched_d, p_d, w_d
+        in zip(nest.axes, schedules, num_devices, weights))
 
 
 def make_chunk_plan(
@@ -97,6 +131,7 @@ def make_chunk_plan(
     num_devices: int,
     *,
     paper_master_excluded: bool = False,
+    weights=None,
 ) -> ChunkPlan:
     t = loop.trip_count
     p = max(1, num_devices)
@@ -112,12 +147,49 @@ def make_chunk_plan(
         raise ValueError(schedule.kind)
     c = max(1, min(c, max(1, t)))
     k = max(1, -(-t // c))          # chunks needed
-    k_pad = -(-k // p) * p          # padded to multiple of P
+    if weights is None:
+        k_pad = -(-k // p) * p      # padded to multiple of P
+        return ChunkPlan(
+            trip_count=t,
+            num_devices=p,
+            chunk=c,
+            num_chunks=k_pad,
+            local_chunks=k_pad // p,
+            padded_trip=k_pad * c,
+        )
+    # Straggler-weighted deal: rebalance_chunks apportions the k real
+    # chunks proportionally to per-device speed; the slot layout pads
+    # every device to the *maximum* quota so the (n_loc, P, c) staging
+    # reshape keeps its shape-uniformity (SPMD devices share one
+    # program), with sentinel chunks filling unowned slots.
+    from repro.runtime.straggler import rebalance_chunks
+
+    w = tuple(float(x) for x in weights)
+    if len(w) != p:
+        raise ValueError(
+            f"weights length {len(w)} != num_devices {p}")
+    owners = rebalance_chunks(k, list(w))
+    quota = [0] * p
+    for d in owners:
+        quota[d] += 1
+    n_loc = max(1, max(quota))
+    num_slots = n_loc * p
+    sentinel = k                   # first padding chunk (< num_slots
+    per_dev: list[list[int]] = [[] for _ in range(p)]  # whenever used)
+    for j, d in enumerate(owners):
+        per_dev[d].append(j)
+    slot_map: list[int] = []
+    for q in range(n_loc):
+        for d in range(p):
+            slot_map.append(per_dev[d][q] if q < quota[d] else sentinel)
     return ChunkPlan(
         trip_count=t,
         num_devices=p,
         chunk=c,
-        num_chunks=k_pad,
-        local_chunks=k_pad // p,
-        padded_trip=k_pad * c,
+        num_chunks=num_slots,
+        local_chunks=n_loc,
+        padded_trip=num_slots * c,
+        owners=tuple(owners),
+        slot_map=tuple(slot_map),
+        weights=w,
     )

@@ -168,6 +168,7 @@ class DistributedProgram:
     comm_schedule: str = "aggregate"    # fuse per-block combines when set
     use_pallas: bool = False            # Lowering.PALLAS: tiled kernels
     pallas_interpret: bool | None = None
+    chunk_weights: tuple | None = None  # straggler-weighted chunk deal
 
     def __call__(self, env: Mapping[str, Any]) -> dict:
         return _execute(self, {k: jnp.asarray(v) for k, v in env.items()})
@@ -267,6 +268,16 @@ def to_mpi(
 # Execution
 # ---------------------------------------------------------------------------
 
+#: Fault-injection hook (repro.runtime.fault_injection installs a
+#: callable here inside ``inject()``); called with a site name at the
+#: python entry of each distributed executor.  ``None`` in production.
+_fault_hook = None
+
+
+def _maybe_fault(site: str) -> None:
+    if _fault_hook is not None:
+        _fault_hook(site)
+
 
 def _execute(dp: DistributedProgram, env: dict) -> dict:
     program = dp.program
@@ -276,6 +287,7 @@ def _execute(dp: DistributedProgram, env: dict) -> dict:
             lowering=dp.lowering, shard_inputs=dp.shard_inputs,
             paper_master_excluded=dp.paper_master_excluded,
             schedule=dp.schedule_override,
+            weights=dp.chunk_weights,
         )
     plan = dp.plan
     t = plan.nest.total_trip
@@ -380,15 +392,29 @@ def _init_carry(plan):
     return carry
 
 
+def _slot_table(ch):
+    """(n_loc, P) table of global chunk ids per (local chunk, device)
+    slot, or ``None`` for the plain cyclic deal (where the chunk id is
+    just ``q * P + d``)."""
+    if ch.slot_map is None:
+        return None
+    return jnp.asarray(np.asarray(ch.slot_map, dtype=np.int32).reshape(
+        ch.local_chunks, ch.num_devices))
+
+
 def _run_local_chunks(plan, program, env_in, slab_stacks, worker_index,
                       unroll_chunks=False):
     """Scan this device's chunks; returns (carry, ys_stacked)."""
     ch = plan.chunks
     shapes = {k: plan.context.vars[k].shape for k in plan.vars}
     carry0 = _init_carry(plan)
+    slot_table = _slot_table(ch)
 
     def one_chunk(carry, q):
-        j = q * ch.num_devices + worker_index
+        if slot_table is None:
+            j = q * ch.num_devices + worker_index
+        else:
+            j = slot_table[q, worker_index]
         k0 = j * ch.chunk
         ks, valid, kc, ivec = _chunk_iteration_vectors(plan, j)
         if isinstance(q, int):
@@ -417,6 +443,7 @@ def _run_local_chunks(plan, program, env_in, slab_stacks, worker_index,
 
 
 def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
+    _maybe_fault("collective")
     plan, program, mesh = dp.plan, dp.program, dp.mesh
     axis = plan.axis
     t = plan.loop.trip_count
@@ -471,8 +498,7 @@ def _execute_collective(dp: DistributedProgram, env: dict) -> dict:
                         jax.lax.psum(mask.astype(jnp.int32), axis),
                     )
             elif dec.out_strategy == "put":
-                j_star = (t - 1) // plan.chunks.chunk
-                owner = j_star % plan.chunks.num_devices
+                owner = plan.chunks.owner_of_last_iteration()
                 val = jnp.where(d == owner, carry[key],
                                 jnp.zeros_like(carry[key]))
                 if aggregate:
@@ -606,6 +632,7 @@ def _run_local_chunks2(plan, program, env_in, slab_stacks, device_indices,
     loop_i, loop_j = plan.nest.axes
     d_i, d_j = device_indices
     n_i, n_j = ch_i.local_chunks, ch_j.local_chunks
+    tab_i, tab_j = _slot_table(ch_i), _slot_table(ch_j)
 
     carry0: dict[str, Any] = {}
     for key, dec in plan.vars.items():
@@ -617,8 +644,10 @@ def _run_local_chunks2(plan, program, env_in, slab_stacks, device_indices,
 
     def one_pair(carry, q):
         qi, qj = q // n_j, q % n_j
-        ji = qi * ch_i.num_devices + d_i
-        jj = qj * ch_j.num_devices + d_j
+        ji = (tab_i[qi, d_i] if tab_i is not None
+              else qi * ch_i.num_devices + d_i)
+        jj = (tab_j[qj, d_j] if tab_j is not None
+              else qj * ch_j.num_devices + d_j)
         _, valid_i, _, ivec = _axis_lane_vectors(ch_i, loop_i, ji)
         _, valid_j, _, jvec = _axis_lane_vectors(ch_j, loop_j, jj)
         env_sub = _make_env_sub2(plan, env_in, slab_stacks, (qi, qj),
@@ -656,6 +685,7 @@ def _run_local_chunks2(plan, program, env_in, slab_stacks, device_indices,
 
 
 def _execute_collective2(dp: DistributedProgram, env: dict) -> dict:
+    _maybe_fault("collective2")
     plan, program, mesh = dp.plan, dp.program, dp.mesh
     ax_i, ax_j = plan.axes_names
     ch_i, ch_j = plan.chunks_axes

@@ -1,4 +1,8 @@
 """Distributed runtime: fault tolerance, straggler mitigation, elasticity."""
 from repro.runtime.fault_tolerance import FaultTolerantLoop  # noqa: F401
-from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor, rebalance_chunks  # noqa: F401
 from repro.runtime.elastic import plan_elastic_remesh, reshard_tree  # noqa: F401
+from repro.runtime.fault_injection import (  # noqa: F401
+    DeviceLossError, FaultPlan, FaultSpec, Injector, inject)
+from repro.runtime.resilient import (  # noqa: F401
+    CorruptOutputError, ResilientExecutor, RetryPolicy)

@@ -53,33 +53,51 @@ class FaultTolerantLoop:
         self.on_restore = on_restore
         self.retries_used = 0
         self.restores = 0
+        # The retry budget is *per incident*: once the loop makes real
+        # progress past the failing step after a restore, the counter
+        # rearms so a long run survives any number of isolated transient
+        # failures.  Replayed steps before the failure point do NOT
+        # rearm — a step that fails deterministically still exhausts.
+        self._reset_pending = False
+        self._failed_step: int | None = None
 
     def run(self, state: Any, *, start_step: int, num_steps: int) -> Any:
         step = start_step
         end = start_step + num_steps
+        initial = state
         while step < end:
             try:
                 if self.failure_hook is not None:
                     self.failure_hook(step)
                 state = self.step_fn(state, step)
+                if self._reset_pending and step >= self._failed_step:
+                    self.retries_used = 0
+                    self._reset_pending = False
                 step += 1
                 if step % self.checkpoint_every == 0:
                     self.ckpt.save_async(step, state)
             except Exception as e:  # noqa: BLE001 - the restart boundary
                 self.retries_used += 1
+                self._failed_step = step
                 if self.retries_used > self.max_retries:
                     raise RuntimeError(
                         f"retry budget exhausted at step {step}") from e
                 log.warning("step %d failed (%s); restoring", step, e)
                 time.sleep(self.backoff_s * (2 ** (self.retries_used - 1)))
+                # Drain any in-flight async save first: without this the
+                # restore can race the background writer, miss the newest
+                # checkpoint, and silently restart further back.
+                self.ckpt.wait()
                 restored = self.ckpt.restore_latest(state)
                 if restored is None:
                     # no checkpoint yet: restart from the initial state
                     step = start_step
+                    state = initial
                 else:
                     step, state = restored
                 if self.on_restore is not None:
                     state = self.on_restore(state)
                 self.restores += 1
+                self._reset_pending = True
         self.ckpt.wait()
         return state

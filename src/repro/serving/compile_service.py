@@ -19,8 +19,11 @@ translation requests) submit concurrently; the service
 * wires the seed :mod:`repro.runtime.straggler` /
   :mod:`repro.runtime.elastic` hooks: per-request wall time feeds a
   :class:`~repro.runtime.straggler.StragglerMonitor`; when the spike
-  budget is exhausted the service plans a degraded-mesh restart
-  (:func:`~repro.runtime.elastic.plan_elastic_remesh`) and surfaces it
+  budget is exhausted the service escalates — first (given operator
+  ``device_weights``) it recompiles with a straggler-weighted chunk
+  schedule (``Options.chunk_weights``, counted in ``rebalances``);
+  only if the straggler persists does it plan a degraded-mesh restart
+  (:func:`~repro.runtime.elastic.plan_elastic_remesh`) and surface it
   via :meth:`CompileService.health` / the ``on_evict`` callback.
 
 ``benchmarks/serving_load.py`` drives this under a many-client load
@@ -57,7 +60,7 @@ class ServiceStats:
     family as the engine's dropped results)."""
 
     _FIELDS = ("requests", "warm_hits", "cold_compiles", "coalesced",
-               "errors", "evictions")
+               "errors", "rebalances", "evictions")
 
     def __init__(self) -> None:
         for f in self._FIELDS:
@@ -92,7 +95,8 @@ class CompileService:
                  persistent_dir: str | None = None,
                  monitor: StragglerMonitor | None = None,
                  on_evict: Callable[[RemeshPlan], None] | None = None,
-                 model_parallel: int = 1) -> None:
+                 model_parallel: int = 1,
+                 device_weights=None) -> None:
         self.mesh = mesh
         self.options = options if options is not None else api_mod.Options()
         if persistent_dir is not None:
@@ -107,6 +111,9 @@ class CompileService:
         self._monitor_lock = threading.Lock()
         self._on_evict = on_evict
         self._model_parallel = model_parallel
+        self._device_weights = (tuple(device_weights)
+                                if device_weights is not None else None)
+        self._weighted_options: Any = None
         self.remesh_plan: RemeshPlan | None = None
 
     # ------------------------------------------------------------- keys --
@@ -201,8 +208,32 @@ class CompileService:
         with self._monitor_lock:
             self.stats.run_seconds += dt
             status = self.monitor.observe(dt)
-            if status == "evict" and self.remesh_plan is None:
+            if status != "evict" or self.remesh_plan is not None:
+                return
+            if (self._device_weights is not None
+                    and self._weighted_options is None):
+                self._escalate_weighted()
+            else:
                 self._plan_degraded()
+
+    def _escalate_weighted(self) -> None:
+        """First escalation rung: keep every device but re-deal its
+        chunk share to the operator-supplied ``device_weights`` — a
+        recompile (through the cache) with a straggler-weighted
+        schedule, cheaper than evicting the slow device outright.  The
+        spike budget resets; if the straggler persists through the
+        rebalanced schedule, the next exhaustion falls through to
+        :meth:`_plan_degraded`."""
+        self.stats.inc("rebalances")
+        opts = self.options
+        lowering = opts.lowering
+        if lowering is not api_mod.Lowering.COLLECTIVE:
+            # weighted schedules live in the collective chunk executor
+            lowering = api_mod.Lowering.COLLECTIVE
+        self._weighted_options = dataclasses.replace(
+            opts, lowering=lowering, chunk_weights=self._device_weights)
+        self.options = self._weighted_options
+        self.monitor.spikes = 0
 
     def _plan_degraded(self) -> None:
         """The elastic escalation path: a persistent straggler means
@@ -230,6 +261,8 @@ class CompileService:
             "spikes": self.monitor.spikes,
             "steps": self.monitor.steps,
             "degraded": self.remesh_plan is not None,
+            "rebalanced": self._weighted_options is not None,
+            "device_weights": self._device_weights,
             "remesh_plan": (dataclasses.asdict(self.remesh_plan)
                             if self.remesh_plan is not None else None),
             "inflight": len(self._inflight),

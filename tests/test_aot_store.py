@@ -163,6 +163,92 @@ def test_version_skew_is_a_miss(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# size-capped eviction
+# ---------------------------------------------------------------------------
+
+
+def _entry_size(tmp_path) -> int:
+    probe = AOTStore(str(tmp_path / "probe"))
+    probe.save("p", _compiled_exe())
+    return os.path.getsize(probe._entry_path("p"))
+
+
+def test_eviction_sweeps_oldest_beyond_cap(tmp_path):
+    size = _entry_size(tmp_path)
+    store = AOTStore(str(tmp_path / "s"), max_bytes=2 * size + size // 2)
+    for i, key in enumerate(["k0", "k1", "k2"]):
+        store.save(key, _compiled_exe())
+        os.utime(store._entry_path(key), (1000.0 + i, 1000.0 + i))
+    store.save("k3", _compiled_exe())              # sweeps the oldest
+    assert store.stats["evictions"] >= 1
+    assert store.stats["evicted_bytes"] >= size
+    left = store.entries()
+    assert "k3" in left and "k0" not in left
+    assert sum(os.path.getsize(store._entry_path(k)) for k in left) \
+        <= store.max_bytes
+
+
+def test_eviction_is_lru_load_refreshes_recency(tmp_path):
+    size = _entry_size(tmp_path)
+    store = AOTStore(str(tmp_path / "s"), max_bytes=2 * size + size // 2)
+    store.save("old", _compiled_exe())
+    store.save("new", _compiled_exe())
+    os.utime(store._entry_path("old"), (1000.0, 1000.0))
+    os.utime(store._entry_path("new"), (2000.0, 2000.0))
+    assert store.load("old") is not None           # touch: now the MRU
+    assert os.path.getmtime(store._entry_path("old")) > 2000.0
+    store.save("k3", _compiled_exe())
+    left = store.entries()
+    assert "old" in left and "new" not in left
+
+
+def test_never_evicts_the_just_written_entry(tmp_path):
+    size = _entry_size(tmp_path)
+    store = AOTStore(str(tmp_path / "s"), max_bytes=size // 2)  # < 1 entry
+    assert store.save("only", _compiled_exe()) is True
+    assert store.entries() == ["only"]             # protected from itself
+    store.save("next", _compiled_exe())
+    assert "next" in store.entries()               # prior entry swept
+    assert "only" not in store.entries()
+
+
+def test_unbounded_store_never_evicts(tmp_path):
+    store = AOTStore(str(tmp_path))
+    for key in ("a", "b", "c", "d"):
+        store.save(key, _compiled_exe())
+    assert store.stats["evictions"] == 0
+    assert store.entries() == ["a", "b", "c", "d"]
+
+
+def test_max_bytes_env_knob(tmp_path, monkeypatch):
+    size = _entry_size(tmp_path)
+    monkeypatch.setenv(aot_store.ENV_MAX_BYTES, str(size + size // 2))
+    store = AOTStore(str(tmp_path / "s"))
+    assert store.max_bytes == size + size // 2
+    store.save("k0", _compiled_exe())
+    os.utime(store._entry_path("k0"), (1000.0, 1000.0))
+    store.save("k1", _compiled_exe())
+    assert store.entries() == ["k1"]
+    monkeypatch.setenv(aot_store.ENV_MAX_BYTES, "not-a-number")
+    assert AOTStore(str(tmp_path / "s2")).max_bytes is None
+    monkeypatch.setenv(aot_store.ENV_MAX_BYTES, "0")
+    assert AOTStore(str(tmp_path / "s3")).max_bytes is None
+
+
+def test_eviction_tolerates_foreign_and_vanishing_files(tmp_path):
+    size = _entry_size(tmp_path)
+    store = AOTStore(str(tmp_path / "s"), max_bytes=size + size // 2)
+    # non-.aot debris must be ignored, not counted or deleted
+    debris = os.path.join(store.path, "README.txt")
+    open(debris, "w").write("not an entry")
+    store.save("k0", _compiled_exe())
+    os.utime(store._entry_path("k0"), (1000.0, 1000.0))
+    store.save("k1", _compiled_exe())
+    assert os.path.exists(debris)
+    assert store.entries() == ["k1"]
+
+
+# ---------------------------------------------------------------------------
 # end-to-end through omp.compile
 # ---------------------------------------------------------------------------
 

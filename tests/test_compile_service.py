@@ -169,6 +169,58 @@ def test_straggler_evict_plans_degraded_remesh():
     assert int(np.prod(h["remesh_plan"]["new_shape"])) <= want_n
 
 
+def test_straggler_escalation_rebalances_before_evicting():
+    """With operator-supplied device_weights the first spike-budget
+    exhaustion recompiles with a straggler-weighted schedule (same
+    device count, re-dealt chunks) and resets the budget; only a
+    *second* exhaustion falls through to the degraded-mesh plan."""
+    omp.clear_compile_cache()
+    plans = []
+    n_dev = mesh1().devices.size
+    svc = CompileService(
+        mesh1(),
+        monitor=StragglerMonitor(spike_factor=2.0, spike_budget=3),
+        on_evict=plans.append,
+        device_weights=[2.0] + [1.0] * (n_dev - 1))
+    blk, env = _block("esc")
+    ref = blk(env)
+    out = svc.run(blk, env)
+    np.testing.assert_array_equal(np.asarray(out["y"]), np.asarray(ref["y"]))
+    for _ in range(20):
+        svc._observe(0.010)
+    for _ in range(10):
+        svc._observe(0.200)
+    # first exhaustion: weighted recompile, not eviction
+    assert svc.stats.rebalances == 1 and svc.stats.evictions == 0
+    assert svc.remesh_plan is None and plans == []
+    h = svc.health()
+    assert h["rebalanced"] is True and h["degraded"] is False
+    assert svc.options.chunk_weights is not None
+    # the weighted options still serve correct results (new structural
+    # key -> one more cold compile, then warm)
+    out2 = svc.run(blk, env)
+    np.testing.assert_array_equal(np.asarray(out2["y"]), np.asarray(ref["y"]))
+    # straggler persists through the rebalanced schedule (spikes big
+    # enough to clear the EWMA adapted during round one): now evict
+    for _ in range(10):
+        svc._observe(2.0)
+    assert svc.stats.evictions == 1 and svc.remesh_plan is not None
+    assert plans == [svc.remesh_plan]
+
+
+def test_no_device_weights_goes_straight_to_degraded():
+    omp.clear_compile_cache()
+    svc = CompileService(
+        mesh1(),
+        monitor=StragglerMonitor(spike_factor=2.0, spike_budget=3))
+    for _ in range(20):
+        svc._observe(0.010)
+    for _ in range(10):
+        svc._observe(0.200)
+    assert svc.stats.rebalances == 0 and svc.stats.evictions == 1
+    assert svc.remesh_plan is not None
+
+
 def test_suggest_rebalance_prefers_fast_devices():
     svc = CompileService(mesh1())
     owners = svc.suggest_rebalance(8, [1.0, 3.0])

@@ -1,0 +1,90 @@
+"""Elastic re-mesh planning edge cases and resharding round-trips."""
+import os
+
+import pytest
+
+from repro.runtime.elastic import plan_elastic_remesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_plan_keeps_model_parallel_when_divisible():
+    p = plan_elastic_remesh(12, model_parallel=4)
+    assert p.new_shape == (3, 4) and p.note == ""
+    assert p.axes == ("data", "model")
+
+
+def test_plan_odd_chip_count_shrinks_tp_to_one():
+    p = plan_elastic_remesh(7, model_parallel=2)
+    assert p.new_shape == (7, 1)
+    assert "shrunk" in p.note
+
+
+def test_plan_halves_tp_until_divisible():
+    p = plan_elastic_remesh(6, model_parallel=4)
+    assert p.new_shape == (3, 2)
+    assert "shrunk to 2" in p.note
+
+
+def test_plan_fewer_chips_than_tp():
+    p = plan_elastic_remesh(2, model_parallel=16)
+    assert p.new_shape == (1, 2)
+
+
+def test_plan_single_chip():
+    p = plan_elastic_remesh(1, model_parallel=8)
+    assert p.new_shape == (1, 1)
+
+
+def test_plan_zero_chips_is_an_error():
+    with pytest.raises(ValueError, match="no valid mesh factoring"):
+        plan_elastic_remesh(0, model_parallel=4)
+
+
+def test_plan_custom_axis_names():
+    p = plan_elastic_remesh(8, model_parallel=2, axes=("i", "j"))
+    assert p.axes == ("i", "j")
+
+
+def run_reshard_roundtrip() -> None:
+    """Subprocess entry (8 virtual devices): shard a tree over the full
+    mesh, lose a device, re-place on the 7-device plan — values intact,
+    every leaf addressable under the shrunk mesh."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.runtime.elastic import plan_elastic_remesh, reshard_tree
+
+    devs = jax.devices()
+    assert len(devs) == 8
+    big = Mesh(np.asarray(devs).reshape(8), ("data",))
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            "b": jnp.arange(8, dtype=jnp.float32)}
+    sharded = reshard_tree(tree, {"w": P("data"), "b": P()}, big)
+    assert sharded["w"].sharding.mesh.devices.size == 8
+
+    plan = plan_elastic_remesh(7, model_parallel=1)
+    n_new = plan.new_shape[0] * plan.new_shape[1]
+    assert n_new == 7
+    small = Mesh(np.asarray(devs[:n_new]).reshape(n_new), ("data",))
+    # 8 rows over 7 devices: shard-by-rows no longer divides evenly, so
+    # the elastic invariant re-places replicated (GSPMD re-slices on use)
+    back = reshard_tree(sharded, {"w": P(), "b": P()}, small)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]),
+                                  np.asarray(tree["b"]))
+    assert back["w"].sharding.mesh.devices.size == 7
+    print("OKRESHARD")
+
+
+def test_reshard_roundtrip_on_shrunk_mesh(multidevice):
+    out = multidevice(f"""
+        import sys
+        sys.path.insert(0, {REPO!r})
+        from tests.test_elastic import run_reshard_roundtrip
+        run_reshard_roundtrip()
+    """, n_devices=8)
+    assert "OKRESHARD" in out

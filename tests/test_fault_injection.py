@@ -1,0 +1,127 @@
+"""Deterministic fault injection: plans, hook sites, scoping."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import omp
+from repro.compat import make_mesh
+from repro.runtime.fault_injection import (
+    DeviceLossError, FaultPlan, FaultSpec, inject)
+
+
+def _case():
+    n = 11
+
+    @omp.parallel_for(stop=n, name="fi_map", schedule=omp.dynamic(2))
+    def prog(i, env):
+        return {"y": omp.at(i, env["x"][i] * 2.0 + 1.0)}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    mesh = make_mesh((1,), ("data",))
+    return omp.compile(prog, mesh, env_like=env), env, prog(env)
+
+
+# ---------------------------------------------------------------- specs --
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(call=0, kind="meteor")
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec(call=0, site="nowhere")
+    with pytest.raises(ValueError, match="call"):
+        FaultSpec(call=-1)
+    with pytest.raises(ValueError, match="nan"):
+        FaultSpec(call=0, kind="nan", site="collective")
+    with pytest.raises(ValueError, match="delay_s"):
+        FaultSpec(call=0, kind="delay", delay_s=-1.0)
+
+
+def test_seeded_plan_is_deterministic():
+    a = FaultPlan.seeded(42, calls=50, rate=0.3, n_ranks=8)
+    b = FaultPlan.seeded(42, calls=50, rate=0.3, n_ranks=8)
+    assert a == b and len(a.specs) > 0
+    c = FaultPlan.seeded(43, calls=50, rate=0.3, n_ranks=8)
+    assert a != c
+    assert all(0 <= s.call < 50 and 0 <= s.rank < 8 for s in a.specs)
+
+
+# ---------------------------------------------------------------- sites --
+
+
+def test_device_loss_at_exact_call():
+    compiled, env, ref = _case()
+    plan = FaultPlan((FaultSpec(call=1, kind="device_loss", rank=0),))
+    with inject(plan) as inj:
+        out0 = compiled.run(env)                      # call 0: clean
+        np.testing.assert_array_equal(np.asarray(out0["y"]),
+                                      np.asarray(ref["y"]))
+        with pytest.raises(DeviceLossError, match="rank 0 at call 1"):
+            compiled.run(env)                         # call 1: dies
+        out2 = compiled.run(env)                      # call 2: clean again
+        np.testing.assert_array_equal(np.asarray(out2["y"]),
+                                      np.asarray(ref["y"]))
+        assert inj.call_count() == 3
+        assert [c for c, _ in inj.fired] == [1]
+
+
+def test_nan_corruption_poisons_outputs():
+    compiled, env, ref = _case()
+    plan = FaultPlan((FaultSpec(call=0, kind="nan"),))
+    with inject(plan) as inj:
+        out = compiled.run(env)
+        assert not bool(jnp.all(jnp.isfinite(out["y"])))
+        clean = compiled.run(env)
+        np.testing.assert_array_equal(np.asarray(clean["y"]),
+                                      np.asarray(ref["y"]))
+    assert len(inj.fired) == 1
+
+
+def test_delay_fault_sleeps():
+    compiled, env, _ = _case()
+    compiled.run(env)                                  # warm outside plan
+    plan = FaultPlan((FaultSpec(call=0, kind="delay", delay_s=0.15),))
+    with inject(plan):
+        t0 = time.perf_counter()
+        compiled.run(env)
+        assert time.perf_counter() - t0 >= 0.15
+
+
+def test_executor_site_fault_fires_in_collective():
+    compiled, env, _ = _case()
+    plan = FaultPlan((FaultSpec(call=0, kind="device_loss",
+                                site="collective"),))
+    with inject(plan) as inj:
+        with pytest.raises(DeviceLossError, match="site 'collective'"):
+            compiled.run(env)
+    assert [s.site for _, s in inj.fired] == ["collective"]
+
+
+# -------------------------------------------------------------- scoping --
+
+
+def test_hooks_restored_after_context():
+    from repro.core import api, transform
+
+    compiled, env, ref = _case()
+    plan = FaultPlan((FaultSpec(call=0, kind="device_loss"),))
+    with pytest.raises(DeviceLossError):
+        with inject(plan):
+            compiled.run(env)
+    assert api._fault_hook is None
+    assert transform._fault_hook is None
+    out = compiled.run(env)                            # no fault leaks
+    np.testing.assert_array_equal(np.asarray(out["y"]),
+                                  np.asarray(ref["y"]))
+
+
+def test_empty_plan_is_a_noop():
+    compiled, env, ref = _case()
+    with inject(FaultPlan()) as inj:
+        out = compiled.run(env)
+    np.testing.assert_array_equal(np.asarray(out["y"]), np.asarray(ref["y"]))
+    assert inj.fired == [] and inj.call_count() == 1

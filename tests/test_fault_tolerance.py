@@ -49,6 +49,123 @@ def test_retry_budget_exhaustion(tmp_path):
         loop.run({"x": jnp.float32(0)}, start_step=0, num_steps=3)
 
 
+def test_retry_budget_resets_after_progress(tmp_path):
+    """Two isolated transient failures, each within the budget, must
+    both be survivable: the budget is per incident, rearming once the
+    loop makes real progress past the failed step.  (Regression: the
+    counter used to be cumulative over the whole run, so a long run
+    died on its max_retries+1'th isolated blip.)"""
+
+    def step_fn(state, step):
+        return {"x": state["x"] + (step + 1) * 0.5}
+
+    ck = Checkpointer(str(tmp_path))
+    failed = set()
+
+    def failure_hook(step):
+        if step in (3, 7) and step not in failed:
+            failed.add(step)
+            raise RuntimeError(f"blip at {step}")
+
+    loop = FaultTolerantLoop(
+        step_fn=step_fn, checkpointer=ck, checkpoint_every=2,
+        max_retries=1, backoff_s=0.0, failure_hook=failure_hook)
+    out = loop.run({"x": jnp.float32(0)}, start_step=0, num_steps=12)
+    assert loop.restores == 2
+    # bit-match the uninterrupted run
+    clean = {"x": jnp.float32(0)}
+    for s in range(12):
+        clean = step_fn(clean, s)
+    np.testing.assert_allclose(np.asarray(out["x"]), np.asarray(clean["x"]))
+
+
+def test_retry_budget_does_not_rearm_on_replayed_steps(tmp_path):
+    """A deterministically-failing step must still exhaust the budget:
+    the successful *replayed* steps before the failure point (restored
+    checkpoint -> failure) must not reset the counter, or the loop
+    would livelock retrying forever."""
+
+    def step_fn(state, step):
+        return {"x": state["x"] + 1.0}
+
+    def failure_hook(step):
+        if step == 5:
+            raise RuntimeError("deterministic failure")
+
+    loop = FaultTolerantLoop(
+        step_fn=step_fn, checkpointer=Checkpointer(str(tmp_path)),
+        checkpoint_every=2, max_retries=3, backoff_s=0.0,
+        failure_hook=failure_hook)
+    with pytest.raises(RuntimeError, match="retry budget"):
+        loop.run({"x": jnp.float32(0)}, start_step=0, num_steps=12)
+    assert loop.retries_used == loop.max_retries + 1
+
+
+def test_pre_checkpoint_failure_restarts_from_initial_state(tmp_path):
+    """A failure before the first checkpoint must rewind the STATE, not
+    just the step counter.  (Regression: the no-checkpoint branch reset
+    ``step`` to start_step but kept the mutated state, double-applying
+    every step already run.)"""
+
+    def step_fn(state, step):
+        return {"x": state["x"] + (step + 1) * 0.5}
+
+    failed = set()
+
+    def failure_hook(step):
+        if step == 1 and step not in failed:
+            failed.add(step)
+            raise RuntimeError("blip before any checkpoint")
+
+    loop = FaultTolerantLoop(
+        step_fn=step_fn, checkpointer=Checkpointer(str(tmp_path)),
+        checkpoint_every=4, max_retries=1, backoff_s=0.0,
+        failure_hook=failure_hook)
+    out = loop.run({"x": jnp.float32(0)}, start_step=0, num_steps=6)
+    clean = {"x": jnp.float32(0)}
+    for s in range(6):
+        clean = step_fn(clean, s)
+    np.testing.assert_allclose(np.asarray(out["x"]), np.asarray(clean["x"]))
+
+
+def test_restore_drains_inflight_async_save(tmp_path):
+    """The restore path must wait for the background checkpoint writer:
+    a slow async save racing the failure must still be discovered, not
+    silently skipped in favour of an older (or no) checkpoint."""
+    import time
+
+    class SlowCheckpointer(Checkpointer):
+        def _write(self, step, names, leaves, extra):
+            time.sleep(0.3)
+            return super()._write(step, names, leaves, extra)
+
+    def step_fn(state, step):
+        return {"x": state["x"] + (step + 1) * 0.5}
+
+    failed = set()
+
+    def failure_hook(step):
+        # fails right after the step-2 checkpoint was *issued* async
+        if step == 3 and step not in failed:
+            failed.add(step)
+            raise RuntimeError("blip racing the writer")
+
+    seen = []
+    loop = FaultTolerantLoop(
+        step_fn=step_fn, checkpointer=SlowCheckpointer(str(tmp_path)),
+        checkpoint_every=2, max_retries=1, backoff_s=0.0,
+        failure_hook=failure_hook,
+        on_restore=lambda s: (seen.append(float(s["x"])), s)[1])
+    out = loop.run({"x": jnp.float32(0)}, start_step=0, num_steps=6)
+    # restored from the step-2 checkpoint (x after steps 0,1 = 1.5),
+    # not from scratch
+    assert seen == [1.5]
+    clean = {"x": jnp.float32(0)}
+    for s in range(6):
+        clean = step_fn(clean, s)
+    np.testing.assert_allclose(np.asarray(out["x"]), np.asarray(clean["x"]))
+
+
 def test_straggler_monitor_detects_and_escalates():
     mon = StragglerMonitor(spike_factor=2.0, spike_budget=3)
     for _ in range(10):
@@ -75,6 +192,38 @@ def test_rebalance_chunks_proportional():
     assert counts[3] > counts[0] > counts[2]
     # cyclic-ish: no device starves
     assert min(counts) >= 1
+
+
+def test_rebalance_fewer_chunks_than_devices_terminates():
+    """Regression: num_chunks < len(weights) used to loop forever in
+    the largest-remainder trim (every quota already at the floor of 1).
+    With fewer chunks than devices the floor drops to 0 and the deal
+    terminates, assigning the chunks to the heaviest devices."""
+    owners = rebalance_chunks(1, [1.0, 1.0])
+    assert len(owners) == 1 and owners[0] in (0, 1)
+    owners = rebalance_chunks(2, [1.0, 1.0, 1.0, 5.0])
+    assert len(owners) == 2
+    assert 3 in owners          # the dominant device gets work
+
+
+def test_rebalance_equal_weights_is_cyclic():
+    owners = rebalance_chunks(13, [1.0] * 4)
+    assert owners == [j % 4 for j in range(13)]
+
+
+def test_rebalance_rejects_degenerate_inputs():
+    with pytest.raises(ValueError):
+        rebalance_chunks(0, [1.0, 1.0])
+    with pytest.raises(ValueError):
+        rebalance_chunks(4, [])
+    with pytest.raises(ValueError):
+        rebalance_chunks(4, [1.0, 0.0])
+    with pytest.raises(ValueError):
+        rebalance_chunks(4, [1.0, -2.0])
+    with pytest.raises(ValueError):
+        rebalance_chunks(4, [1.0, float("nan")])
+    with pytest.raises(ValueError):
+        rebalance_chunks(4, [1.0, float("inf")])
 
 
 def test_elastic_remesh_plan():

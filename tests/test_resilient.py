@@ -1,0 +1,187 @@
+"""Resilient execution: retry, output validation, degraded-mesh
+recovery — and the differential harness pinning that a recovered run
+reproduces the healthy one for every program family.
+
+The recovery invariant: chunk-cyclic layouts make the device count an
+implementation detail, so recompiling the same program on the shrunk
+mesh is semantically a no-op.  Non-reduce outputs bit-match the healthy
+run; reductions regroup their per-device partial folds and match to
+float tolerance.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import omp
+from repro.compat import make_mesh
+from repro.runtime.fault_injection import DeviceLossError, FaultPlan, FaultSpec, inject
+from repro.runtime.resilient import (
+    CorruptOutputError, ResilientExecutor, RetryPolicy)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _case(n_dev=1):
+    n = 13
+
+    @omp.parallel_for(stop=n, name="rex_map", schedule=omp.dynamic(3))
+    def prog(i, env):
+        return {"y": omp.at(i, env["x"][i] * 3.0 - 1.0)}
+
+    env = {"x": jnp.arange(n, dtype=jnp.float32),
+           "y": jnp.zeros(n, jnp.float32)}
+    mesh = make_mesh((n_dev,), ("data",))
+    return omp.compile(prog, mesh, env_like=env), env, prog(env)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_s=-0.1)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_factor=0.5)
+
+
+def test_retry_absorbs_transient_faults():
+    compiled, env, ref = _case()
+    plan = FaultPlan((FaultSpec(call=0), FaultSpec(call=1)))
+    rex = ResilientExecutor(compiled, policy=RetryPolicy(max_retries=2))
+    with inject(plan):
+        out = rex.run(env)
+    np.testing.assert_array_equal(np.asarray(out["y"]), np.asarray(ref["y"]))
+    assert rex.stats["retries"] == 2
+    assert not rex.degraded
+
+
+def test_validation_flags_nan_outputs():
+    compiled, env, _ = _case()
+    rex = ResilientExecutor(compiled, policy=RetryPolicy(
+        max_retries=1, validate_outputs=True))
+    plan = FaultPlan(tuple(FaultSpec(call=k, kind="nan") for k in range(9)))
+    with inject(plan):
+        # every attempt (incl. single-device "recovery") returns NaN —
+        # the executor must surface the corruption, not the poison
+        with pytest.raises(CorruptOutputError):
+            rex.run(env)
+    assert rex.stats["validation_failures"] >= 2
+
+
+def test_validation_off_passes_poison_through():
+    compiled, env, _ = _case()
+    rex = ResilientExecutor(compiled, policy=RetryPolicy(
+        max_retries=0, validate_outputs=False))
+    plan = FaultPlan((FaultSpec(call=0, kind="nan"),))
+    with inject(plan):
+        out = rex.run(env)
+    assert not bool(jnp.all(jnp.isfinite(out["y"])))
+    assert rex.stats["validation_failures"] == 0
+
+
+def test_backoff_schedule_is_deterministic():
+    pol = RetryPolicy(max_retries=3, backoff_s=0.01, jitter_s=0.005, seed=7)
+    compiled, env, _ = _case()
+    a = ResilientExecutor(compiled, policy=pol)
+    b = ResilientExecutor(compiled, policy=pol)
+    assert [a._rng.uniform(0, 1) for _ in range(4)] \
+        == [b._rng.uniform(0, 1) for _ in range(4)]
+
+
+def run_recovery_sweep() -> None:
+    """Subprocess entry (8 virtual devices): for every rank-1 and
+    rank-2 family — injected persistent device loss, degraded-mesh
+    recompile, recovered output vs healthy vs reference."""
+    from tests.test_differential import FAMILIES, FAMILIES2, make_case, make_case2
+
+    def red_keys(prog):
+        stages = getattr(prog, "stages", None)
+        loops = prog.loops if stages is not None else (prog,)
+        keys = set()
+        for lp in loops:
+            keys |= set(getattr(lp, "reduction", {}) or {})
+        return keys
+
+    def check(prog, env, mesh, tag):
+        ref = prog(env)
+        compiled = omp.compile(prog, mesh, env_like=env)
+        healthy = compiled.run(env)
+        plan = FaultPlan(tuple(
+            FaultSpec(call=k, kind="device_loss", rank=2) for k in range(3)))
+        rex = ResilientExecutor(compiled, policy=RetryPolicy(max_retries=2))
+        with inject(plan):
+            recovered = rex.run(env)
+        assert rex.degraded and rex.stats["recoveries"] == 1, (tag, rex.stats)
+        reds = red_keys(prog)
+        for k in ref:
+            h, r, g = (np.asarray(healthy[k]), np.asarray(recovered[k]),
+                       np.asarray(ref[k]))
+            if k in reds:
+                np.testing.assert_allclose(r, g, rtol=1e-5, atol=1e-6,
+                                           err_msg=f"{tag} key={k!r}")
+            else:
+                np.testing.assert_array_equal(r, g,
+                                              err_msg=f"{tag} key={k!r}")
+                np.testing.assert_array_equal(r, h,
+                                              err_msg=f"{tag} key={k!r}")
+
+    mesh = make_mesh((8,), ("data",))
+    for fi, fam in enumerate(FAMILIES):
+        prog, env, fam = make_case(9100 + fi, family=fam)
+        check(prog, env, mesh, f"r1:{fam}")
+    print("recovered1:", ",".join(FAMILIES))
+
+    mesh2 = make_mesh((4, 2), ("i", "j"))
+    for fj, fam in enumerate(FAMILIES2):
+        prog, env, fam = make_case2(9200 + fj, family=fam)
+        check(prog, env, mesh2, f"r2:{fam}")
+    print("recovered2:", ",".join(FAMILIES2))
+    print("OKRECOVERY")
+
+
+def test_degraded_recovery_differential(multidevice):
+    """8 -> 7 devices (rank-1) and (4,2) -> 7 (rank-2): every family
+    recovers onto the shrunk mesh and reproduces the healthy run."""
+    out = multidevice(f"""
+        import sys
+        sys.path.insert(0, {REPO!r})
+        from tests.test_resilient import run_recovery_sweep
+        run_recovery_sweep()
+    """, n_devices=8)
+    assert "OKRECOVERY" in out
+    assert "recovered1:" in out and "recovered2:" in out
+
+
+def run_sticky_degraded() -> None:
+    compiled, env, ref = _case(n_dev=8)
+    healthy = compiled.run(env)
+    np.testing.assert_array_equal(np.asarray(healthy["y"]),
+                                  np.asarray(ref["y"]))
+    seen = []
+    rex = ResilientExecutor(
+        compiled, policy=RetryPolicy(max_retries=1),
+        on_recover=lambda plan: seen.append(plan))
+    plan = FaultPlan(tuple(FaultSpec(call=k) for k in range(2)))
+    with inject(plan):
+        out = rex.run(env)
+    np.testing.assert_array_equal(np.asarray(out["y"]), np.asarray(ref["y"]))
+    assert rex.degraded and len(seen) == 1
+    assert seen[0].new_shape[0] * seen[0].new_shape[1] == 7
+    out2 = rex.run(env)                 # serves from the shrunk mesh
+    np.testing.assert_array_equal(np.asarray(out2["y"]), np.asarray(ref["y"]))
+    rex.reset()
+    assert not rex.degraded
+    out3 = rex.run(env)                 # healed: original artifact again
+    np.testing.assert_array_equal(np.asarray(out3["y"]), np.asarray(ref["y"]))
+    print("OKSTICKY")
+
+
+def test_sticky_degraded_and_reset(multidevice):
+    out = multidevice(f"""
+        import sys
+        sys.path.insert(0, {REPO!r})
+        from tests.test_resilient import run_sticky_degraded
+        run_sticky_degraded()
+    """, n_devices=8)
+    assert "OKSTICKY" in out

@@ -31,9 +31,10 @@ REQUIRED_SECTIONS = {
                   "## Nested loops & 2-D meshes",
                   "## Pallas kernels",
                   "## Serving",
+                  "## Fault tolerance",
                   "omp.compile"],
     "EXPERIMENTS.md": ["## Perf-D", "## Perf-E", "## Perf-G",
-                       "## Perf-H", "## Perf-I"],
+                       "## Perf-H", "## Perf-I", "## Perf-J"],
     "docs/PAPER_MAP.md": ["core/comm.py", "`collapse(2)`", "LoopNest",
                           "core/nest.py", "core/api.py", "`omp.compile`",
                           "plan_comm", "core/comm_schedule.py",
@@ -41,7 +42,10 @@ REQUIRED_SECTIONS = {
                           "further optimized by software engineers",
                           "core/pallas_lower.py", "`Lowering.pallas`",
                           "serving/compile_service.py",
-                          "core/aot_store.py"],
+                          "core/aot_store.py",
+                          "runtime/resilient.py",
+                          "runtime/fault_injection.py",
+                          "chunk_weights"],
 }
 
 # repo-relative path tokens inside backticks, e.g. `src/repro/core/plan.py`
